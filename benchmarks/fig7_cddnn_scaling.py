@@ -1,0 +1,45 @@
+"""Paper Fig. 7 / §5.4 — CD-DNN (7x2048 FC ASR net) hybrid-parallel scaling.
+
+Paper: 4600 frames/s on one Xeon E5-2697v3 node (4x best prior CPU), 13K
+frames/s on 4 nodes (> 3-card K20x), 29.5K frames/s on 16 nodes — i.e. 6.5x
+at 16 nodes.  All-FC networks are the worst case for data parallelism
+(§3.2), so this exercises the hybrid path with optimal G per layer."""
+from __future__ import annotations
+
+from repro.configs import get_config, XEON_E5_2697V3
+from repro.core import balance
+
+MB = 1024          # typical ASR minibatch (paper §3.2 mentions >5120 too)
+PAPER = {1: 4600.0, 4: 13000.0, 16: 29500.0}
+
+
+def rows():
+    cfg = get_config("cd-dnn")
+    out = []
+    r1 = balance.dnn_hybrid_scaling(cfg.input_dim, cfg.hidden_dim,
+                                    cfg.num_hidden, cfg.output_dim,
+                                    MB, 1, XEON_E5_2697V3)
+    # frames/s = MB / step_time
+    f1 = MB / r1["step_time"]
+    out.append(("fig7/cddnn_1node_frames_s", f1, PAPER[1]))
+    for n in (2, 4, 8, 16):
+        rn = balance.dnn_hybrid_scaling(cfg.input_dim, cfg.hidden_dim,
+                                        cfg.num_hidden, cfg.output_dim,
+                                        MB, n, XEON_E5_2697V3)
+        fn = MB / rn["step_time"]
+        paper = PAPER.get(n)
+        out.append((f"fig7/cddnn_{n}node_frames_s", fn, paper))
+        out.append((f"fig7/cddnn_{n}node_speedup", rn["speedup"],
+                    paper / PAPER[1] if paper else None))
+    return out
+
+
+def main():
+    print(f"{'metric':45s} {'model':>12s} {'paper':>10s}")
+    for name, v, paper in rows():
+        p = f"{paper:10.1f}" if paper is not None else "         -"
+        print(f"{name:45s} {v:12.1f} {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Kernel microbenchmarks (paper §2 single-node efficiency layer).
+
+On this CPU container the Pallas kernels run in interpret mode, so wall
+times are NOT TPU-indicative; what we report per kernel is (a) interpret-
+mode us/call for regression tracking, (b) the blocking solver's predicted
+B/F and VMEM footprint — the §2.2 quantities the kernel tiles were chosen
+by — and (c) allclose-vs-oracle as a pass bit."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import solve_conv_blocking, solve_gemm_blocking
+from repro.kernels import ref
+from repro.kernels.blocked_matmul import blocked_matmul
+from repro.kernels.conv2d import conv2d_nhwc
+from repro.kernels.flash_attention import flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+def _t(fn, *args, n=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+def rows():
+    out = []
+    # GEMM: the paper's FC/block-SGEMM case
+    a = jnp.asarray(RNG.normal(size=(256, 512)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(512, 1024)), jnp.float32)
+    blk = solve_gemm_blocking(256, 1024, 512)
+    f = jax.jit(lambda a, b: blocked_matmul(a, b, interpret=True))
+    us, got = _t(f, a, b)
+    ok = np.allclose(got, ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
+    out.append(("kernel/blocked_matmul_256x1024x512", us,
+                f"bf={blk.bf_ratio:.4f};vmem={blk.bytes_per_block};ok={ok}"))
+
+    # conv: the paper's OverFeat C5 case study (reduced channels for CPU)
+    x = jnp.asarray(RNG.normal(size=(1, 14, 14, 64)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(3, 3, 64, 128)), jnp.float32)
+    cblk = solve_conv_blocking(1, 64, 128, 12, 3, cache_bytes=8 * 2**20)
+    f = jax.jit(lambda x, w: conv2d_nhwc(x, w, stride=1, padding=0,
+                                         interpret=True))
+    us, got = _t(f, x, w)
+    ok = np.allclose(got, ref.conv2d_ref(x, w, 1, 0), rtol=1e-4, atol=1e-4)
+    out.append(("kernel/conv2d_c5like_64-128", us,
+                f"bf={cblk.bf_ratio:.4f};ok={ok}"))
+
+    # flash attention: gemma2-style local window + softcap
+    q = jnp.asarray(RNG.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, causal=True, window=128, logit_softcap=50.0,
+        interpret=True))
+    us, got = _t(f, q, k, v)
+    ok = np.allclose(got, ref.attention_ref(q, k, v, causal=True, window=128,
+                                            logit_softcap=50.0),
+                     rtol=3e-4, atol=3e-4)
+    out.append(("kernel/flash_attn_swa_softcap_256", us, f"ok={ok}"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Aggregate experiments/dryrun JSONs into the §Dry-run / §Roofline tables.
+
+``python -m benchmarks.roofline_report [--markdown]`` — also used by
+EXPERIMENTS.md generation."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_rows(directory: str = DRYRUN_DIR):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9,
+                             r["mesh"]))
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(rows, markdown=False):
+    hdr = ["arch", "shape", "mesh", "compute", "memory", "collective",
+           "dominant", "MF/HLO", "MFU", "mem/dev"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append("  ".join(f"{h:>10s}" for h in hdr))
+    for r in rows:
+        if r.get("status") != "ok":
+            cells = [r["arch"], r["shape"], r["mesh"], "ERROR",
+                     r.get("error", "")[:40], "", "", "", "", ""]
+        else:
+            cells = [r["arch"], r["shape"], r["mesh"],
+                     fmt_s(r["compute_s"]), fmt_s(r["memory_s"]),
+                     fmt_s(r["collective_s"]), r["dominant"],
+                     f"{r['useful_ratio']:.2f}", f"{r['mfu'] * 100:.1f}%",
+                     f"{r['mem_per_dev_gb']:.1f}G"]
+        if markdown:
+            lines.append("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            lines.append("  ".join(f"{str(c):>10s}" for c in cells))
+    return "\n".join(lines)
+
+
+def summary(rows):
+    ok = [r for r in rows if r.get("status") == "ok"]
+    bad = [r for r in rows if r.get("status") != "ok"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return dict(total=len(rows), ok=len(ok), failed=len(bad),
+                dominant_counts=doms,
+                worst_mfu=sorted((r["mfu"], r["arch"], r["shape"], r["mesh"])
+                                 for r in ok if r["shape"] == "train_4k")[:3])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows()
+    print(table(rows, markdown=args.markdown))
+    print()
+    print(json.dumps(summary(rows), indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  ``derived`` carries the paper's
+reported number (when one exists) so reproduction vs paper is visible in
+one place; the roofline section summarizes the dry-run table (deliverable g).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def _emit(name, value, derived=""):
+    if isinstance(value, float):
+        value = f"{value:.4f}"
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def _section(title):
+    print(f"# --- {title} ---", flush=True)
+
+
+def main() -> None:
+    failures = 0
+
+    _section("Table 1: data-parallel balance (paper vs computed)")
+    try:
+        from benchmarks import table1_balance
+        for name, computed, paper in table1_balance.rows():
+            _emit(name, float(computed), f"paper={paper}")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    _section("Fig 3: single-node throughput & minibatch insensitivity")
+    try:
+        from benchmarks import fig3_single_node
+        for name, v, paper in fig3_single_node.analytic_rows():
+            _emit(name, float(v), f"paper={paper}")
+        for name, v, paper in fig3_single_node.measured_rows():
+            _emit(name, float(v), "" if paper is None else f"ref={paper}")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    _section("Fig 4: VGG-A scaling on Cori (balance model)")
+    try:
+        from benchmarks import fig4_vgg_scaling
+        for name, v, paper, extra in fig4_vgg_scaling.rows():
+            _emit(name, float(v), f"paper={paper};{extra}")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    _section("Fig 5: synchronous-SGD convergence identity")
+    try:
+        from benchmarks import fig5_convergence
+        for name, v, paper in fig5_convergence.rows():
+            _emit(name, float(v), "" if paper is None else f"ref={paper}")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    _section("Fig 6: AWS 10GbE scaling (balance model)")
+    try:
+        from benchmarks import fig6_aws_scaling
+        for name, v, paper in fig6_aws_scaling.rows():
+            _emit(name, float(v), "" if paper is None else f"paper={paper}")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    _section("Fig 7: CD-DNN hybrid-parallel scaling")
+    try:
+        from benchmarks import fig7_cddnn_scaling
+        for name, v, paper in fig7_cddnn_scaling.rows():
+            _emit(name, float(v), "" if paper is None else f"paper={paper}")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    _section("Kernels: §2 single-node layer (interpret mode)")
+    try:
+        from benchmarks import kernels_micro
+        for name, us, derived in kernels_micro.rows():
+            _emit(name, float(us), derived)
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    _section("Roofline: dry-run aggregate (deliverable g)")
+    try:
+        from benchmarks import roofline_report
+        rows = roofline_report.load_rows()
+        if rows:
+            s = roofline_report.summary(rows)
+            _emit("roofline/pairs_total", s["total"])
+            _emit("roofline/pairs_ok", s["ok"])
+            _emit("roofline/pairs_failed", s["failed"])
+            for dom, cnt in sorted(s["dominant_counts"].items()):
+                _emit(f"roofline/dominant_{dom}", cnt)
+        else:
+            _emit("roofline/pairs_total", 0,
+                  "run python -m repro.launch.dryrun --all first")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

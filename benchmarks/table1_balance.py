@@ -1,0 +1,61 @@
+"""Paper Table 1 — 'Theoretical Scaling of Data Parallelism'.
+
+Reproduces: required comp-to-comms per platform, the per-network algorithmic
+ratios (§3.1: OverFeat-FAST 208, VGG-A 1456), minimum data points per node
+and the implied node counts for a 256-minibatch run.  Computed from
+``core.balance`` — the paper's equations — and printed next to the paper's
+reported values."""
+from __future__ import annotations
+
+import math
+
+from repro.configs import (
+    get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
+)
+from repro.core import balance
+from repro.core.balance import LayerBalance, conv_comp_flops, \
+    data_parallel_comm_bytes, max_data_parallel_nodes
+
+PAPER = {
+    ("comp_to_comms", "FDR"): 336, ("comp_to_comms", "10GbE"): 1336,
+    ("ratio", "overfeat-fast"): 208, ("ratio", "vgg-a"): 1456,
+    ("min_points", "overfeat-fast", "FDR"): 2,
+    ("min_points", "overfeat-fast", "10GbE"): 3,
+    ("min_points", "vgg-a", "FDR"): 1,
+    ("min_points", "vgg-a", "10GbE"): 1,
+}
+
+
+def rows():
+    out = []
+    out.append(("table1/comp_to_comms_FDR",
+                FDR.peak_flops / FDR.link_bw, PAPER[("comp_to_comms", "FDR")]))
+    out.append(("table1/comp_to_comms_10GbE",
+                GBE.peak_flops / GBE.link_bw,
+                PAPER[("comp_to_comms", "10GbE")]))
+    for net in ("overfeat-fast", "vgg-a"):
+        cfg = get_config(net)
+        r = balance.aggregate_comp_comm_ratio(cfg.conv_layers())
+        out.append((f"table1/comp_comm_ratio_{net}", r,
+                    PAPER[("ratio", net)]))
+        layers = [LayerBalance(str(i), conv_comp_flops(l, 1),
+                               data_parallel_comm_bytes(l))
+                  for i, l in enumerate(cfg.conv_layers())]
+        for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
+            n = max_data_parallel_nodes(layers, hw, 256)
+            min_pts = max(1, math.ceil(256 / max(n, 1)))
+            out.append((f"table1/min_points_{net}_{tag}", min_pts,
+                        PAPER[("min_points", net, tag)]))
+            out.append((f"table1/max_nodes_{net}_{tag}", n, 256 / PAPER[
+                ("min_points", net, tag)]))
+    return out
+
+
+def main():
+    print(f"{'metric':45s} {'computed':>12s} {'paper':>10s}")
+    for name, computed, paper in rows():
+        print(f"{name:45s} {computed:12.1f} {paper:10.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""§Perf hillclimb driver: lowers config variants for the three selected
+(arch x shape x mesh) pairs and records hypothesis -> before -> after rows.
+
+    PYTHONPATH=src python experiments/perf_lab.py --pair qwen2-moe --variant V1
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+from repro.configs import get_config  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "perf")
+
+PAIRS = {
+    "qwen2-moe": ("qwen2-moe-a2.7b", "train_4k", False),
+    "mixtral": ("mixtral-8x22b", "train_4k", True),
+    "llama3": ("llama3-8b", "train_4k", False),
+    "gemma2-decode": ("gemma2-2b", "decode_32k", False),
+}
+
+VARIANTS = {
+    # ---- qwen2-moe train_4k 16x16 (worst roofline fraction) ----
+    ("qwen2-moe", "V1"): dict(moe_down_rs=True),
+    ("qwen2-moe", "V2"): dict(moe_expert_pad=4),
+    ("qwen2-moe", "V3"): dict(moe_expert_pad=4, loss_chunk=8),
+    ("qwen2-moe", "V4"): dict(moe_expert_pad=4, loss_chunk=8,
+                              remat="block_dots"),
+    # V5 = V1 + explicit sharding constraints on the un-dispatch gather
+    # (code change in moe.py; same knobs as V1)
+    ("qwen2-moe", "V5"): dict(moe_down_rs=True),
+    ("qwen2-moe", "V6"): dict(moe_down_rs=True, loss_chunk=8),
+    ("qwen2-moe", "V7"): dict(moe_expert_pad=4),
+    # ---- mixtral train_4k 2x16x16 (most collective-bound absolute) ----
+    ("mixtral", "M1"): dict(moe_down_rs=True),
+    ("mixtral", "M2"): dict(remat="block_dots"),
+    ("mixtral", "M3"): dict(moe_down_rs=True, remat="block_dots"),
+    ("mixtral", "M4"): dict(moe_expert_pad=8),
+    ("mixtral", "M5"): dict(moe_expert_pad=8, remat="block_dots"),
+    # ---- llama3 train_4k 16x16 (paper-representative dense) ----
+    ("llama3", "L1"): dict(loss_chunk=8),
+    ("llama3", "L2"): dict(remat="block_dots"),
+    ("llama3", "L3"): dict(loss_chunk=8, remat="block_dots"),
+    ("llama3", "L4"): dict(seq_shard_carry=True),
+    ("llama3", "L5"): dict(seq_shard_carry=True, loss_chunk=8),
+    # ---- bonus: gemma2 decode_32k (most collective-bound ratio) ----
+    ("gemma2-decode", "D1"): dict(),  # code change: sharded_decode_attention
+}
+
+
+def run(pair: str, variant: str, force: bool = False) -> dict:
+    os.makedirs(OUT, exist_ok=True)
+    arch, shape, multi = PAIRS[pair]
+    fname = os.path.join(OUT, f"{pair}__{variant}.json")
+    if os.path.exists(fname) and not force:
+        return json.load(open(fname))
+    cfg = get_config(arch)
+    if variant != "V0":
+        cfg = cfg.replace(**VARIANTS[(pair, variant)])
+    print(f"[perf] {pair} {variant}: {VARIANTS.get((pair, variant), {})}",
+          flush=True)
+    row = dryrun.lower_pair(arch, shape, multi, cfg_override=cfg,
+                            verbose=True)
+    row["variant"] = variant
+    row["knobs"] = VARIANTS.get((pair, variant), {})
+    with open(fname, "w") as f:
+        json.dump(row, f, indent=1, default=str)
+    print(f"[perf] {pair} {variant}: comp={row['compute_s']:.2f}s "
+          f"mem={row['memory_s']:.2f}s coll={row['collective_s']:.2f}s "
+          f"dom={row['dominant']} mfu={row['mfu'] * 100:.1f}%", flush=True)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=list(PAIRS))
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    run(args.pair, args.variant, args.force)
+
+
+if __name__ == "__main__":
+    main()

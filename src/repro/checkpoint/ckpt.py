@@ -1,0 +1,73 @@
+"""Checkpointing: flattened-pytree npz + JSON manifest.
+
+Arrays are gathered to host (fine at example scale; sharded per-host writes
+would slot in here on a real cluster — the manifest format already records
+per-leaf paths)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(directory: str, step: int, **trees) -> str:
+    os.makedirs(directory, exist_ok=True)
+    payload: Dict[str, np.ndarray] = {}
+    manifest: Dict[str, Any] = {"step": step, "trees": {}}
+    for name, tree in trees.items():
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        keys = []
+        for path, leaf in flat:
+            k = f"{name}:{_key_str(path)}"
+            payload[k] = np.asarray(jax.device_get(leaf))
+            keys.append(k)
+        manifest["trees"][name] = keys
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **payload)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, **templates) -> Tuple[Dict[str, Any], int]:
+    """templates: name=pytree-with-matching-structure.  Returns (trees, step)."""
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    out = {}
+    for name, template in templates.items():
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat:
+            k = f"{name}:{_key_str(path)}"
+            arr = jnp.asarray(data[k])
+            assert arr.shape == leaf.shape, (k, arr.shape, leaf.shape)
+            leaves.append(arr)
+        out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+    return out, step

@@ -1,0 +1,244 @@
+"""Paper §3 — computation/communication balance equations for synchronous SGD.
+
+Every formula here is a direct transcription of the paper (Das et al. 2016),
+with the equation it came from cited inline.  All comp quantities are FLOPs,
+all comm quantities are bytes, all times are seconds.
+
+These equations are used three ways:
+  * by ``benchmarks/`` to regenerate the paper's Table 1 and the analytic
+    scaling curves behind Figs 4/6/7 (paper-faithful reproduction);
+  * by ``core.hybrid`` to pick the data/model/hybrid strategy per layer
+    (the paper's §3.2/§3.3 decision rules);
+  * by tests, as executable documentation (property tests assert the
+    closed forms match the long forms).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable, List, Sequence, Tuple
+
+from repro.configs.base import ConvLayerSpec, HardwareConfig
+
+SIZE_F32 = 4
+
+
+# ---------------------------------------------------------------------------
+# §3.1 data parallelism — per-layer comp and comm
+# ---------------------------------------------------------------------------
+def conv_comp_flops(l: ConvLayerSpec, mb_node: int) -> float:
+    """Paper §3.1: Comp = 3*2*MB_node*ifm*ofm*k_w*k_h*out_w*out_h
+    (forward + backprop + weight-gradient, each 2*MACs)."""
+    return 3.0 * 2.0 * mb_node * l.ifm * l.ofm * l.kernel * l.kernel * l.out_hw * l.out_hw
+
+
+def fc_comp_flops(ifm: int, ofm: int, mb_node: int) -> float:
+    """FC = conv with k=out=1 (paper §2.1)."""
+    return 3.0 * 2.0 * mb_node * ifm * ofm
+
+
+def data_parallel_comm_bytes(l: ConvLayerSpec, overlap: float = 1.0,
+                             size_data: int = SIZE_F32) -> float:
+    """Paper §3.1: Comm = size_data*ifm*ofm*k_w*k_h*(2-overlap).
+    (send partial weight gradients + receive updated weights; overlap=1
+    means sends/receives fully overlap each other.)"""
+    k = max(l.kernel, 1)
+    return size_data * l.ifm * l.ofm * k * k * (2.0 - overlap)
+
+
+def data_parallel_comp_comm_ratio(l: ConvLayerSpec, mb_node: int) -> float:
+    """Paper §3.1 closed form: comp_comm = 1.5*out_w*out_h*MB_node
+    (FP32, overlap=1).  Independent of kernel size, ifm, ofm, stride."""
+    return 1.5 * l.out_hw * l.out_hw * mb_node
+
+
+def aggregate_comp_comm_ratio(layers: Sequence[ConvLayerSpec],
+                              mb_node: int = 1, overlap: float = 1.0) -> float:
+    """Network-level comp-to-comm for the data-parallel regime: total conv
+    FLOPs per node / total gradient+weight bytes.  The paper quotes 208 for
+    OverFeat-FAST and 1456 for VGG-A conv layers."""
+    comp = sum(conv_comp_flops(l, mb_node) for l in layers)
+    comm = sum(data_parallel_comm_bytes(l, overlap) for l in layers)
+    return comp / comm
+
+
+# ---------------------------------------------------------------------------
+# §3.1 overlap / bubble model
+# ---------------------------------------------------------------------------
+@dataclass
+class LayerBalance:
+    name: str
+    comp: float    # FLOPs per node per iteration (3 passes)
+    comm: float    # bytes per node per iteration (data-parallel volume)
+
+
+def bubble_schedule(layers: Sequence[LayerBalance], hw: HardwareConfig,
+                    efficiency: float = 1.0) -> List[float]:
+    """Paper §3.1:
+        ocomp_i  = sum_{j<i} comp_j + comp_i/3
+        ocomms_i = sum_{j<=i} comms_j
+        bubble_i = ocomms_i/comms_sys - ocomp_i/comp_sys
+    Layers are indexed in FORWARD order; communication of layer i (issued
+    right after its weight-gradient in backprop) can overlap with the
+    remaining backprop of layers j<i plus layer i's own input-grad pass
+    (the comp_i/3 term — the paper computes the weight gradient BEFORE
+    backprop to enlarge the overlap window).  Returns per-layer bubbles
+    (seconds, may be negative = fully hidden)."""
+    comp_sys = hw.peak_flops * efficiency
+    bubbles = []
+    for i, li in enumerate(layers):
+        ocomp = sum(l.comp for l in layers[:i]) + li.comp / 3.0
+        ocomms = sum(l.comm for l in layers[: i + 1])
+        bubbles.append(ocomms / hw.link_bw - ocomp / comp_sys)
+    return bubbles
+
+
+def scaling_efficiency(layers: Sequence[LayerBalance], hw: HardwareConfig,
+                       efficiency: float = 1.0) -> float:
+    """Paper §3.1: efficiency = (sum comp_i / comp_sys) /
+    (sum_i bubble_i+ + sum comp_i / comp_sys).  Positive bubbles are the
+    un-hidden communication; bubble_0 (the first layer) is never hidable."""
+    comp_sys = hw.peak_flops * efficiency
+    t_comp = sum(l.comp for l in layers) / comp_sys
+    bubbles = bubble_schedule(layers, hw, efficiency)
+    t_bubble = sum(max(0.0, b) for b in bubbles)
+    return t_comp / (t_comp + t_bubble)
+
+
+def max_data_parallel_nodes(layers: Sequence[LayerBalance],
+                            hw: HardwareConfig, minibatch: int) -> float:
+    """Paper §3.1: N <= minibatch * (comms_sys/comp_sys) * (ocomp_k/ocomms_k)
+    where L_k is the last layer in the data-parallel regime.  comp here is
+    per data point (MB_node = 1)."""
+    k = len(layers) - 1
+    ocomp_k = sum(l.comp for l in layers[:k]) + layers[k].comp / 3.0
+    ocomms_k = sum(l.comm for l in layers)
+    n = minibatch * (hw.link_bw / hw.peak_flops) * (ocomp_k / ocomms_k)
+    return min(float(minibatch), n)  # >= 1 data point per node
+
+
+# ---------------------------------------------------------------------------
+# §3.2 model parallelism
+# ---------------------------------------------------------------------------
+def model_parallel_comm_bytes(ifm: int, in_hw: int, minibatch: int,
+                              size_data: int = SIZE_F32) -> float:
+    """Paper §3.2 total forward-pass activation exchange:
+    size_data * ifm * input_w * input_h * minibatch."""
+    return size_data * ifm * in_hw * in_hw * minibatch
+
+
+def model_parallel_preferred(l: ConvLayerSpec, in_hw: int, minibatch: int,
+                             overlap: float = 1.0) -> bool:
+    """Paper §3.2 decision rule:
+    ofm*k_w*k_h*(2-overlap) > input_w*input_h*minibatch  => model parallel.
+    For FC layers (k=in=1): ofm > minibatch => model parallel."""
+    k = max(l.kernel, 1)
+    return l.ofm * k * k * (2.0 - overlap) > in_hw * in_hw * minibatch
+
+
+# ---------------------------------------------------------------------------
+# §3.3 hybrid parallelism
+# ---------------------------------------------------------------------------
+def hybrid_comm_bytes(ifm: int, ofm: int, kernel: int, in_hw: int,
+                      minibatch: int, G: int, N: int,
+                      overlap: float = 0.0, size_data: int = SIZE_F32) -> float:
+    """Paper §3.3: total communication volume for G data-parallel groups of
+    N/G model-parallel nodes:
+        G > 1: 2*size*ifm*in_w*in_h*(minibatch/G)
+               + size*ofm*ifm*k_w*k_h*(2-overlap)*(G/N)
+        G = 1: 2*size*ifm*in_w*in_h*minibatch            (pure model parallel)
+    """
+    k = max(kernel, 1)
+    if G <= 1:
+        return 2.0 * size_data * ifm * in_hw * in_hw * minibatch
+    model_part = 2.0 * size_data * ifm * in_hw * in_hw * (minibatch / G)
+    data_part = size_data * ofm * ifm * k * k * (2.0 - overlap) * (G / N)
+    return model_part + data_part
+
+
+def optimal_group_count(N: int, minibatch: int, ofm: int) -> int:
+    """Paper §3.3 (FC layer, FP32, no overlap):
+    d(8*ifm*(minibatch/G + ofm*G/N))/dG = 0  =>  G = sqrt(N*minibatch/ofm).
+    Clamped to [1, N] and rounded to the nearest divisor-friendly integer."""
+    g = math.sqrt(N * minibatch / ofm)
+    g = max(1.0, min(float(N), g))
+    return max(1, round(g))
+
+
+def hybrid_comm_at_optimum(ifm: int, ofm: int, minibatch: int, N: int,
+                           size_data: int = SIZE_F32) -> Tuple[int, float]:
+    """Evaluate the §3.3 FC example.  For ofm=4096, minibatch=256, N=64 the
+    paper gets G=3 and volume 8*ifm*213 (vs 8*ifm*256 for G=1)."""
+    G = optimal_group_count(N, minibatch, ofm)
+    vol = hybrid_comm_bytes(ifm, ofm, 1, 1, minibatch, G, N, overlap=0.0,
+                            size_data=size_data)
+    return G, vol
+
+
+# ---------------------------------------------------------------------------
+# Whole-network scaling model (drives the Fig 4 / Fig 6 / Fig 7 benchmarks)
+# ---------------------------------------------------------------------------
+def network_balance(conv_layers: Sequence[ConvLayerSpec],
+                    fc_layers: Sequence[ConvLayerSpec],
+                    minibatch: int, nodes: int, hw: HardwareConfig,
+                    compute_eff: float = 0.75,
+                    overlap: float = 1.0) -> dict:
+    """Estimate one-iteration time and scaling efficiency at ``nodes`` nodes.
+
+    Conv layers run data-parallel with the §3.1 bubble/overlap model.
+    FC layers run hybrid-parallel with the §3.3 optimal G; their activation
+    and weight exchanges are not overlappable with conv compute in the
+    paper's schedule, so their comm adds serially (conservative, matches the
+    paper's observation that FC layers 'do not scale much').
+    """
+    mb_node = max(1.0, minibatch / nodes)
+    comp_sys = hw.peak_flops * compute_eff
+
+    conv = [LayerBalance(f"conv{i}", conv_comp_flops(l, mb_node),
+                         data_parallel_comm_bytes(l, overlap))
+            for i, l in enumerate(conv_layers)]
+    t_conv_comp = sum(l.comp for l in conv) / comp_sys
+    if nodes == 1:
+        t_conv = t_conv_comp
+        t_fc = sum(fc_comp_flops(l.ifm, l.ofm, minibatch) for l in fc_layers) / comp_sys
+        return dict(step_time=t_conv + t_fc, efficiency=1.0, G_fc=1)
+
+    bubbles = bubble_schedule(conv, hw, compute_eff)
+    t_conv = t_conv_comp + sum(max(0.0, b) for b in bubbles)
+
+    t_fc = 0.0
+    G_used = 1
+    for l in fc_layers:
+        G = optimal_group_count(nodes, minibatch, l.ofm)
+        G_used = G
+        comm = hybrid_comm_bytes(l.ifm, l.ofm, 1, 1, minibatch, G, nodes,
+                                 overlap=0.0)
+        comp = fc_comp_flops(l.ifm, l.ofm, minibatch) / nodes
+        t_fc += comp / comp_sys + comm / hw.link_bw + hw.sw_latency
+    step = t_conv + t_fc
+    # efficiency vs perfect scaling of the single-node time
+    single = (sum(conv_comp_flops(l, minibatch) for l in conv_layers)
+              + sum(fc_comp_flops(l.ifm, l.ofm, minibatch) for l in fc_layers)) / comp_sys
+    eff = single / (nodes * step)
+    return dict(step_time=step, efficiency=min(1.0, eff), G_fc=G_used)
+
+
+def dnn_hybrid_scaling(input_dim: int, hidden: int, n_hidden: int,
+                       output_dim: int, minibatch: int, nodes: int,
+                       hw: HardwareConfig, compute_eff: float = 0.6) -> dict:
+    """§5.4 CD-DNN: all-FC network under hybrid parallelism."""
+    dims = [(input_dim, hidden)] + [(hidden, hidden)] * (n_hidden - 1) \
+        + [(hidden, output_dim)]
+    comp_sys = hw.peak_flops * compute_eff
+    if nodes == 1:
+        t = sum(fc_comp_flops(i, o, minibatch) for i, o in dims) / comp_sys
+        return dict(step_time=t, efficiency=1.0, speedup=1.0)
+    t = 0.0
+    for i, o in dims:
+        G = optimal_group_count(nodes, minibatch, o)
+        comm = hybrid_comm_bytes(i, o, 1, 1, minibatch, G, nodes, overlap=0.5)
+        t += fc_comp_flops(i, o, minibatch) / nodes / comp_sys \
+            + comm / hw.link_bw + hw.sw_latency
+    single = sum(fc_comp_flops(i, o, minibatch) for i, o in dims) / comp_sys
+    return dict(step_time=t, efficiency=min(1.0, single / (nodes * t)),
+                speedup=single / t)

@@ -1,0 +1,93 @@
+"""Paper §3.4 — the two communication primitives, on jax.lax collectives.
+
+    part-reduce    = reduce partial tensors over a node group, scatter the
+                     result strips  -> MPI_Reduce_scatter -> lax.psum_scatter
+    part-broadcast = every node broadcasts its strip to the group
+                     -> MPI_Allgather -> lax.all_gather
+
+The paper uses part-reduce between local weight-gradient computation and the
+SGD update (each node updates a 1/G strip of the weights), and part-broadcast
+to repopulate the updated weights — see ``optim/dist.py``.  In model-parallel
+forward, part-reduce combines partial activations; part-broadcast rebuilds
+full input gradients in backprop.
+
+These run inside ``jax.shard_map``; axis_name may be a single mesh axis or a
+tuple (e.g. ("pod", "data") for the multi-pod gradient reduction — the
+cross-pod hop composes with the in-pod ring exactly as the paper composes
+groups).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+def axis_size(axis_name: AxisNames) -> int:
+    if isinstance(axis_name, str):
+        return lax.axis_size(axis_name)
+    n = 1
+    for a in axis_name:
+        n *= lax.axis_size(a)
+    return n
+
+
+def part_reduce(x: jax.Array, axis_name: AxisNames, dim: int = 0) -> jax.Array:
+    """Reduce-scatter ``x`` (replicated-shape partial sums, one per member of
+    ``axis_name``) into per-member strips along ``dim``.
+    Paper Fig. 1 (MPI_Reduce_scatter)."""
+    return lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)
+
+
+def part_broadcast(x: jax.Array, axis_name: AxisNames, dim: int = 0) -> jax.Array:
+    """All-gather strips along ``dim`` so every group member holds the full
+    tensor.  Paper Fig. 2 (MPI_Allgather)."""
+    return lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def part_reduce_broadcast(x: jax.Array, axis_name: AxisNames,
+                          dim: int = 0) -> jax.Array:
+    """part_broadcast(part_reduce(x)) == psum(x); the strip round-trip is the
+    bandwidth-optimal ring allreduce decomposition (2*(G-1)/G * bytes)."""
+    return part_broadcast(part_reduce(x, axis_name, dim), axis_name, dim)
+
+
+# ---------------------------------------------------------------------------
+# Strip helpers for the distributed optimizer: arbitrary-shaped tensors are
+# flattened and padded so every group member owns an equal 1-D strip.
+# ---------------------------------------------------------------------------
+def padded_size(n: int, group: int) -> int:
+    return ((n + group - 1) // group) * group
+
+
+def flatten_pad(x: jax.Array, group: int) -> jax.Array:
+    flat = x.reshape(-1)
+    pad = padded_size(flat.size, group) - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+def unflatten(flat: jax.Array, shape: Sequence[int]) -> jax.Array:
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def strip_reduce(grad: jax.Array, axis_name: AxisNames) -> jax.Array:
+    """part-reduce a gradient tensor into this member's 1-D strip
+    (mean over the group, matching synchronous-SGD averaging)."""
+    g = axis_size(axis_name)
+    flat = flatten_pad(grad, g)
+    return part_reduce(flat, axis_name, dim=0) / g
+
+
+def strip_broadcast(strip: jax.Array, axis_name: AxisNames,
+                    shape: Sequence[int]) -> jax.Array:
+    """part-broadcast updated weight strips back to the full tensor."""
+    return unflatten(part_broadcast(strip, axis_name, dim=0), shape)

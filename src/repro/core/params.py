@@ -1,0 +1,71 @@
+"""Parameter-spec system: one declaration yields init, logical axes, shapes.
+
+Models declare trees of ``Spec`` leaves; ``init_tree`` materializes arrays,
+``axes_tree``/``shape_tree`` extract the matching metadata pytrees consumed by
+``core.sharding`` (so the param pytree and its sharding pytree can never drift
+apart structurally).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"          # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_tree(specs, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            a = jnp.zeros(s.shape, dtype)
+        elif s.init == "ones":
+            a = jnp.ones(s.shape, dtype)
+        elif s.init == "embed":
+            a = jax.random.normal(k, s.shape, dtype) * s.scale
+        elif s.init == "normal":
+            a = jax.random.normal(k, s.shape, dtype) * s.scale
+        else:  # fan_in
+            fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[0], 1)
+            if len(s.shape) >= 3:  # (.., in, out) stacked weights
+                fan_in = s.shape[-2]
+            a = jax.random.normal(k, s.shape, dtype) * (
+                s.scale / np.sqrt(fan_in))
+        arrs.append(a)
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def shape_tree(specs):
+    return jax.tree.map(lambda s: s.shape, specs, is_leaf=_is_spec)
+
+
+def abstract_tree(specs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+        is_leaf=_is_spec)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

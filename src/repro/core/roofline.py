@@ -1,0 +1,160 @@
+"""Roofline-term extraction from compiled (post-GSPMD) HLO.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = sum over collectives of ring-model bytes / link_bw
+
+``compiled.cost_analysis()`` reports per-device FLOPs/bytes (the module is
+already SPMD-partitioned).  Collective bytes are NOT in cost_analysis, so we
+parse the HLO text: for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction we take the result-shape bytes and
+the replica-group size, and charge the bandwidth-optimal ring cost:
+
+    all-gather      (n-1)/n * result_bytes          (result = full tensor)
+    reduce-scatter  (n-1)/n * operand_bytes
+    all-reduce      2*(n-1)/n * result_bytes
+    all-to-all      (n-1)/n * result_bytes
+    collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import HardwareConfig, TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(?P<dtype>[a-z0-9]+)\[(?P<dims>[0-9,]*)\][^=]*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype, 4)
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    ring_bytes: float = 0.0      # link-traversal bytes after ring discount
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("dtype"), m.group("dims"))
+        gm = _GROUPS_RE.search(line)
+        group = int(gm.group(2)) if gm else 2
+        frac = (group - 1) / group if group > 1 else 0.0
+        if op == "all-reduce":
+            ring = 2.0 * frac * nbytes
+        elif op == "collective-permute":
+            ring = float(nbytes)
+        else:
+            ring = frac * nbytes
+        stats.bytes_by_kind[op] = stats.bytes_by_kind.get(op, 0) + nbytes
+        stats.count_by_kind[op] = stats.count_by_kind.get(op, 0) + 1
+        stats.ring_bytes += ring
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    coll: CollectiveStats
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    mem_per_dev_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips): catches remat and
+        redundant recompute (ratio << 1) or rematerialization-free lowering
+        (ratio ~ 1)."""
+        total_hlo = self.hlo_flops_per_dev * self.n_devices
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-implied step time."""
+        t = self.step_time_s
+        if not t:
+            return 0.0
+        return self.model_flops_total / (
+            self.n_devices * 197e12 * t)
+
+    def row(self) -> dict:
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh,
+            devices=self.n_devices,
+            flops_per_dev=self.hlo_flops_per_dev,
+            bytes_per_dev=self.hlo_bytes_per_dev,
+            coll_bytes=self.coll.total_bytes,
+            coll_ring_bytes=self.coll.ring_bytes,
+            coll_counts=dict(self.coll.count_by_kind),
+            compute_s=self.compute_s, memory_s=self.memory_s,
+            collective_s=self.collective_s, dominant=self.dominant,
+            model_flops=self.model_flops_total,
+            useful_ratio=self.useful_flops_ratio,
+            mem_per_dev_gb=self.mem_per_dev_bytes / 2**30,
+            mfu=self.mfu,
+        )
+
+
+def analyze(arch: str, shape: str, mesh_desc: str, n_devices: int,
+            cost: Dict[str, float], hlo_text: str,
+            model_flops_total: float,
+            mem_per_dev_bytes: float = 0.0,
+            hw: HardwareConfig = TPU_V5E) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, n_devices=n_devices,
+        hlo_flops_per_dev=flops, hlo_bytes_per_dev=nbytes, coll=coll,
+        compute_s=flops / hw.peak_flops,
+        memory_s=nbytes / hw.mem_bw,
+        collective_s=coll.ring_bytes / hw.link_bw,
+        model_flops_total=model_flops_total,
+        mem_per_dev_bytes=mem_per_dev_bytes,
+    )

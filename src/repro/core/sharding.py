@@ -1,0 +1,109 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-safe.
+
+Every parameter and activation names its dims with *logical* axes
+("batch", "ff", "heads", ...).  A rule table maps logical axes to mesh axes;
+the resolver drops a rule whenever the dim is not divisible by the mesh-axis
+extent (e.g. 8 kv-heads on a 16-way model axis), so one rule table serves all
+ten architectures.
+
+The rule table IS the paper's hybrid-parallel assignment: "batch" on the
+data-parallel group axes (pod, data) = the G groups of §3.3; feature-like
+axes ("ff", "heads", "vocab", "experts", ...) on the in-group "model" axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Optional[Tuple[str, ...]]   # mesh axes one logical axis maps to
+
+# Paper-faithful hybrid-parallel rules (DESIGN.md §2).
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # data-parallel group axes (the paper's G groups)
+    "batch": ("pod", "data"),
+    # model-parallel (within-group) axes
+    "ff": ("model",),
+    "moe_ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "experts": ("model",),        # falls back to moe_ff when E % 16 != 0
+    "moe_out": ("model",),        # moe_down_rs: shard down-proj output d
+    # replicated by default
+    "embed": None,
+    "embed_fsdp": ("data",),      # FSDP weight sharding (mixtral etc.)
+    "seq": None,
+    "seq_res": ("model",),        # seq_shard_carry: residual stream seq dim
+    "kernel": None,
+    "head_dim": None,
+    "ssm_state": None,
+    "codebooks": None,
+    "cache_seq": None,            # long_500k: overridden to ("data",)
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, MeshAxes] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def with_overrides(self, **over: MeshAxes) -> "ShardingRules":
+        r = dict(self.rules)
+        r.update(over)
+        return ShardingRules(r)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int], mesh: Mesh) -> P:
+        """Resolve logical axes to a PartitionSpec, honoring divisibility and
+        never assigning one mesh axis twice."""
+        used = set()
+        parts = []
+        for name, dim in zip(logical_axes, shape):
+            assignment = None
+            if name is not None:
+                cand = self.rules.get(name)
+                if cand:
+                    axes = tuple(a for a in cand if a in mesh.axis_names
+                                 and a not in used)
+                    extent = 1
+                    for a in axes:
+                        extent *= mesh.shape[a]
+                    if axes and extent > 1 and dim % extent == 0:
+                        assignment = axes if len(axes) > 1 else axes[0]
+                        used.update(axes)
+            parts.append(assignment)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int], mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical_axes, shape, mesh))
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    """Carried through model code; no-op when mesh is None (CPU tests)."""
+    mesh: Optional[Mesh] = None
+    rules: ShardingRules = field(default_factory=ShardingRules)
+
+    def constrain(self, x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = self.rules.spec(logical_axes, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh,
+                   rules: ShardingRules):
+    """Map a pytree of logical-axes tuples + matching shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda ax, shp: rules.sharding(ax, shp, mesh),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (  # noqa: F401
+    Prefetcher, make_placer, stream_for, lm_token_stream, image_stream,
+    asr_frame_stream, vlm_stream, audio_stream,
+)

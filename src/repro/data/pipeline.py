@@ -1,0 +1,175 @@
+"""Data pipeline — the paper's §4 'data handling module' adapted.
+
+The paper dedicates a hardware thread so pre-processing never starves the
+compute library.  Here a background thread fills a bounded queue with
+host-side numpy batches (double buffering), and batches are placed onto the
+mesh with the batch-dim sharding before the step consumes them.
+
+Streams are synthetic but deterministic (seeded): LM token streams with a
+Zipf-ish unigram plus a learnable bigram structure (so losses actually fall),
+image/label streams for the CNNs, frame/senone streams for CD-DNN, and the
+VLM/audio composites (including MusicGen's codebook delay pattern).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, CNNConfig, DNNConfig
+
+
+# ---------------------------------------------------------------------------
+# synthetic sources (deterministic)
+# ---------------------------------------------------------------------------
+def lm_token_stream(vocab: int, batch: int, seq: int,
+                    seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Markov-ish token stream: learnable bigram structure."""
+    rng = np.random.default_rng(seed)
+    V = int(vocab)
+    shift = rng.integers(1, V, size=()).item()
+    while True:
+        first = rng.integers(0, V, size=(batch, 1))
+        noise = rng.random((batch, seq - 1)) < 0.15
+        toks = [first]
+        for t in range(1, seq):
+            nxt = (toks[-1] * 31 + shift) % V
+            rand = rng.integers(0, V, size=(batch, 1))
+            toks.append(np.where(noise[:, t - 1: t], rand, nxt))
+        yield {"tokens": np.concatenate(toks, axis=1).astype(np.int32)}
+
+
+def image_stream(image_size: int, num_classes: int, batch: int,
+                 seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Images whose class determines a planted frequency pattern."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:image_size, 0:image_size].astype(np.float32)
+    while True:
+        labels = rng.integers(0, num_classes, size=(batch,))
+        freq = (labels[:, None, None] + 1).astype(np.float32)
+        base = np.sin(freq * xx[None] / image_size * 6.28) \
+            + np.cos(freq * yy[None] / image_size * 6.28)
+        img = base[..., None] + 0.3 * rng.standard_normal(
+            (batch, image_size, image_size, 3)).astype(np.float32)
+        yield {"images": img.astype(np.float32),
+               "labels": labels.astype(np.int32)}
+
+
+def asr_frame_stream(input_dim: int, num_senones: int, batch: int,
+                     seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    proto = rng.standard_normal((num_senones, input_dim)).astype(np.float32)
+    while True:
+        sen = rng.integers(0, num_senones, size=(batch,))
+        frames = proto[sen] + 0.5 * rng.standard_normal(
+            (batch, input_dim)).astype(np.float32)
+        yield {"frames": frames.astype(np.float32),
+               "senones": sen.astype(np.int32)}
+
+
+def vlm_stream(cfg: ModelConfig, batch: int, seq_txt: int,
+               seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    from repro.models.frontends import mrope_positions
+    rng = np.random.default_rng(seed)
+    lm = lm_token_stream(cfg.vocab_size, batch, seq_txt, seed)
+    s_img = cfg.vision_tokens
+    grid_w = max(1, int(np.sqrt(s_img)))
+    pos = np.asarray(mrope_positions(batch, s_img, seq_txt, grid_w=grid_w))
+    while True:
+        toks = next(lm)["tokens"]
+        emb = 0.02 * rng.standard_normal(
+            (batch, s_img, cfg.d_model)).astype(np.float32)
+        yield {"tokens": toks, "patch_embeds": emb, "positions": pos}
+
+
+def audio_stream(cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    from repro.models.frontends import delay_pattern
+    rng = np.random.default_rng(seed)
+    K = cfg.num_codebooks
+    lm = lm_token_stream(cfg.vocab_size, batch, seq * K, seed)
+    while True:
+        toks = next(lm)["tokens"].reshape(batch, seq, K)
+        delayed = np.asarray(delay_pattern(jnp.asarray(toks), K))
+        emb = 0.02 * rng.standard_normal(
+            (batch, seq, cfg.d_model)).astype(np.float32)
+        yield {"frame_embeds": emb,
+               "codebook_labels": delayed.astype(np.int32)}
+
+
+def stream_for(cfg, batch: int, seq: int, seed: int = 0):
+    if isinstance(cfg, CNNConfig):
+        return image_stream(cfg.image_size, cfg.num_classes, batch, seed)
+    if isinstance(cfg, DNNConfig):
+        return asr_frame_stream(cfg.input_dim, cfg.output_dim, batch, seed)
+    if cfg.frontend == "vision":
+        return vlm_stream(cfg, batch, seq - cfg.vision_tokens, seed)
+    if cfg.frontend == "audio":
+        return audio_stream(cfg, batch, seq, seed)
+    return lm_token_stream(cfg.vocab_size, batch, seq, seed)
+
+
+# ---------------------------------------------------------------------------
+# prefetching + device placement (the paper's dedicated data thread)
+# ---------------------------------------------------------------------------
+BATCH_SPECS = {
+    "tokens": ("batch", "seq"), "images": ("batch", None, None, None),
+    "labels": ("batch",), "frames": ("batch", None), "senones": ("batch",),
+    "patch_embeds": ("batch", "seq", "embed"),
+    "positions": ("batch", "seq", None),
+    "frame_embeds": ("batch", "seq", "embed"),
+    "codebook_labels": ("batch", "seq", None),
+}
+
+
+class Prefetcher:
+    """Background-thread prefetch with a bounded queue (double buffering)."""
+
+    def __init__(self, source: Iterator, depth: int = 2,
+                 place: Optional[Callable] = None):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._place = place or (lambda b: jax.tree.map(jnp.asarray, b))
+        self._stop = threading.Event()
+
+        def worker():
+            for item in source:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._place(self._q.get())
+
+    def close(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def make_placer(mesh: Optional[Mesh], rules) -> Callable:
+    if mesh is None:
+        return lambda b: jax.tree.map(jnp.asarray, b)
+
+    def place(batch):
+        out = {}
+        for k, v in batch.items():
+            axes = BATCH_SPECS.get(k, ("batch",) + (None,) * (v.ndim - 1))
+            sh = rules.sharding(axes, v.shape, mesh)
+            out[k] = jax.device_put(jnp.asarray(v), sh)
+        return out
+    return place

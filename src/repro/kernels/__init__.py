@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
+
+Kernels implement the paper's §2 single-node efficiency layer, adapted from
+x86 cache/register blocking to VMEM/MXU blocking — see DESIGN.md §2.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.blocked_matmul import blocked_matmul  # noqa: F401
+from repro.kernels.conv2d import conv2d_nhwc  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401

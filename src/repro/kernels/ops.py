@@ -1,0 +1,89 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel bodies execute in Python/XLA for correctness validation; on TPU they
+compile to Mosaic.  ``attention`` carries a ``jax.custom_vjp`` whose backward
+pass is the pure-jnp reference gradient (recompute, no score materialization
+in fwd) so the kernel is usable inside ``train_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.blocked_matmul import blocked_matmul
+from repro.kernels.conv2d import conv2d_nhwc
+from repro.kernels.flash_attention import flash_attention
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(a: jax.Array, b: jax.Array, interpret: Optional[bool] = None):
+    it = _on_cpu() if interpret is None else interpret
+    return blocked_matmul(a, b, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "interpret"))
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0,
+           interpret: Optional[bool] = None):
+    it = _on_cpu() if interpret is None else interpret
+    return conv2d_nhwc(x, w, stride=stride, padding=padding, interpret=it)
+
+
+# ---------------------------------------------------------------------------
+# attention with kernel forward + reference backward
+# ---------------------------------------------------------------------------
+def _pad_seq(x, multiple):
+    s = x.shape[1]
+    pad = (-s) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x, pad
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              logit_softcap: float = 0.0):
+    """Flash-attention kernel with GQA/SWA/softcap; (B,S,H,D) layout."""
+    return _attention_fwd(q, k, v, causal, window, logit_softcap)[0]
+
+
+def _attention_fwd(q, k, v, causal, window, logit_softcap):
+    sq, skv = q.shape[1], k.shape[1]
+    bq = min(128, sq)
+    bkv = min(128, skv)
+    if sq % bq or skv % bkv or (skv - sq) % 1:
+        qp, pq = _pad_seq(q, bq)
+        kp, pk = _pad_seq(k, bkv)
+        vp, _ = _pad_seq(v, bkv)
+    else:
+        qp, kp, vp, pq, pk = q, k, v, 0, 0
+    if pq or pk:
+        # padded keys must be masked: right-aligned layout breaks with pads,
+        # fall back to the reference for ragged shapes (rare in practice).
+        out = ref.attention_ref(q, k, v, causal=causal, window=window,
+                                logit_softcap=logit_softcap)
+    else:
+        out = flash_attention(qp, kp, vp, causal=causal, window=window,
+                              logit_softcap=logit_softcap, bq=bq, bkv=bkv,
+                              interpret=_on_cpu())
+    return out, (q, k, v)
+
+
+def _attention_bwd(causal, window, logit_softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(
+            q_, k_, v_, causal=causal, window=window,
+            logit_softcap=logit_softcap), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS (512 host devices) at import time, by design."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: F401

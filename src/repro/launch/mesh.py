@@ -1,0 +1,45 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis joins "data" for the paper's G data-parallel groups; gradient
+part-reduce runs over ("pod", "data") so the cross-pod hop composes with the
+in-pod ring.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 512 if multi_pod else 256
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for the production mesh, have "
+            f"{len(devices)}; the dry-run sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:ndev],
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_ways: int = 1) -> Mesh:
+    """Best-effort mesh over whatever devices exist (examples, tests)."""
+    n = len(jax.devices())
+    model_ways = max(1, min(model_ways, n))
+    data = n // model_ways
+    return jax.make_mesh((data, model_ways), ("data", "model"),
+                         devices=jax.devices()[: data * model_ways],
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def mesh_devices(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

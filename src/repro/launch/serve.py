@@ -1,0 +1,50 @@
+"""Serving launcher: batched prefill + decode with a reduced model.
+
+``python -m repro.launch.serve --arch llama3-8b --smoke --batch 4 --new 32``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant, ASSIGNED_ARCHS
+from repro.core.sharding import ShardingCtx
+from repro.models import transformer
+from repro.serve import generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if cfg.frontend:
+        raise SystemExit("serve demo supports token-in/token-out archs")
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    ctx = ShardingCtx()
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = generate(params, cfg, ctx, prompt, args.new,
+                   temperature=args.temperature, key=key)
+    dt = time.perf_counter() - t0
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.new / dt:.1f} tok/s)")
+    print(out[0][:16])
+    return out
+
+
+if __name__ == "__main__":
+    main()

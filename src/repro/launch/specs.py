@@ -1,0 +1,85 @@
+"""Abstract (ShapeDtypeStruct) inputs for every (arch x input-shape) pair —
+weak-type-correct, shardable, zero allocation.  Consumed by launch/dryrun.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.core.params import Spec
+from repro.core.sharding import ShardingRules
+from repro.models import transformer
+
+
+def _sds(shape, dtype, axes, mesh: Mesh, rules: ShardingRules):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=rules.sharding(axes, shape, mesh))
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
+                    dtype=jnp.float32):
+    specs = transformer.param_specs(cfg)
+    return jax.tree.map(
+        lambda s: _sds(s.shape, dtype, s.axes, mesh, rules),
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def abstract_batch(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                   rules: ShardingRules) -> Dict[str, Any]:
+    """Training / prefill batch specs (full sequence)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision":
+        s_img = cfg.vision_tokens
+        return {
+            "tokens": _sds((B, S - s_img), jnp.int32, ("batch", "seq"),
+                           mesh, rules),
+            "patch_embeds": _sds((B, s_img, cfg.d_model), jnp.float32,
+                                 ("batch", "seq", "embed"), mesh, rules),
+            "positions": _sds((B, S, 3), jnp.int32, ("batch", "seq", None),
+                              mesh, rules),
+        }
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": _sds((B, S, cfg.d_model), jnp.float32,
+                                 ("batch", "seq", "embed"), mesh, rules),
+            "codebook_labels": _sds((B, S, cfg.num_codebooks), jnp.int32,
+                                    ("batch", "seq", None), mesh, rules),
+        }
+    return {"tokens": _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)}
+
+
+def abstract_caches(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                    rules: ShardingRules, long_ctx: bool):
+    """Cache specs matching transformer.init_caches structure."""
+    template = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, shape.global_batch,
+                                        shape.seq_len, long_ctx=long_ctx))
+    axes = transformer.cache_axes(cfg)
+
+    def to_sds(t, ax):
+        ax = tuple(ax)[: t.ndim] + (None,) * max(0, t.ndim - len(ax))
+        return _sds(t.shape, t.dtype, ax, mesh, rules)
+
+    return jax.tree.map(
+        to_sds, template, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_decode_inputs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                           rules: ShardingRules, long_ctx: bool):
+    """One-token decode inputs: (tokens/frame_embeds, positions, caches)."""
+    B = shape.global_batch
+    caches = abstract_caches(cfg, shape, mesh, rules, long_ctx)
+    pos_shape = (B, 1, 3) if cfg.mrope else (B, 1)
+    pos = _sds(pos_shape, jnp.int32,
+               ("batch", "seq", None)[: len(pos_shape)], mesh, rules)
+    if cfg.frontend == "audio":
+        tok = _sds((B, 1, cfg.d_model), jnp.float32,
+                   ("batch", "seq", "embed"), mesh, rules)
+        return {"frame_embeds": tok, "positions": pos, "caches": caches}
+    tok = _sds((B, 1), jnp.int32, ("batch", "seq"), mesh, rules)
+    return {"tokens": tok, "positions": pos, "caches": caches}

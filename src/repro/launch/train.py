@@ -1,0 +1,94 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On CPU (this container) use --smoke for the reduced config; on a real TPU
+slice the full config shards across the detected devices with the same
+rules/plan machinery the dry-run exercises."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config, smoke_variant, ASSIGNED_ARCHS, PAPER_ARCHS
+from repro.configs.base import CNNConfig, DNNConfig
+from repro.core.params import Spec
+from repro.core.sharding import ShardingCtx, ShardingRules
+from repro.data import Prefetcher, make_placer, stream_for
+from repro.launch.mesh import make_host_mesh
+from repro.models import cnn, dnn, transformer
+from repro.optim import AdamW, MomentumSGD, warmup_cosine
+from repro.train import Trainer, TrainerConfig, make_train_step
+
+
+def build(cfg, mesh, rules):
+    ctx = ShardingCtx(mesh, rules)
+    if isinstance(cfg, CNNConfig):
+        init = lambda k: cnn.init_params(cfg, k)
+        loss = lambda p, b: cnn.loss_fn(p, cfg, b, ctx)
+        sp_tree = cnn.param_specs(cfg)
+    elif isinstance(cfg, DNNConfig):
+        init = lambda k: dnn.init_params(cfg, k)
+        loss = lambda p, b: dnn.loss_fn(p, cfg, b, ctx)
+        sp_tree = dnn.param_specs(cfg)
+    else:
+        init = lambda k: transformer.init_params(cfg, k)
+        loss = lambda p, b: transformer.lm_loss(p, cfg, ctx, b)
+        sp_tree = transformer.param_specs(cfg)
+    return init, loss, sp_tree, ctx
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    choices=list(ASSIGNED_ARCHS) + list(PAPER_ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--model-ways", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "sgd"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    mesh = make_host_mesh(args.model_ways) if len(jax.devices()) > 1 else None
+    rules = ShardingRules()
+    init, loss, sp_tree, ctx = build(cfg, mesh, rules)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init(key)
+    if mesh is not None:
+        shardings = jax.tree.map(
+            lambda s: rules.sharding(s.axes, s.shape, mesh), sp_tree,
+            is_leaf=lambda x: isinstance(x, Spec))
+        params = jax.tree.map(jax.device_put, params, shardings)
+
+    opt = AdamW(weight_decay=0.01) if args.optimizer == "adamw" \
+        else MomentumSGD(momentum=0.9)
+    opt_state = opt.init(params)
+    sched = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
+    step = make_train_step(loss, opt, sched)
+
+    placer = make_placer(mesh, rules)
+    data = Prefetcher(stream_for(cfg, args.batch, args.seq, args.seed),
+                      place=placer)
+    tcfg = TrainerConfig(total_steps=args.steps, log_every=5,
+                         ckpt_every=0 if not args.ckpt_dir else args.steps,
+                         ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(step, tcfg)
+    params, opt_state, hist = trainer.fit(params, opt_state, data)
+    data.close()
+    print(f"final loss: {hist[-1]['loss']:.4f}")
+    return hist
+
+
+if __name__ == "__main__":
+    main()

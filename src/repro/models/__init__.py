@@ -1,0 +1,1 @@
+from repro.models import cnn, dnn, frontends, layers, moe, ssm, transformer  # noqa: F401

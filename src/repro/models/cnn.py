@@ -1,0 +1,74 @@
+"""The paper's CNN workloads (VGG-A, OverFeat-FAST) in JAX, NHWC.
+
+Forward conv can route through the Pallas direct-conv kernel (§2 adapted,
+``use_pallas=True``) or lax.conv (XLA); both match ``kernels.ref.conv2d_ref``.
+Layer specs come straight from ``configs/vgg_a.py`` / ``overfeat_fast.py`` so
+the model, the Table-1 balance benchmark and the scaling benchmarks share one
+source of truth.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import CNNConfig, ConvLayerSpec
+from repro.core.params import Spec, init_tree
+from repro.core.sharding import ShardingCtx
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def param_specs(cfg: CNNConfig) -> Dict[str, Spec]:
+    sp: Dict[str, Spec] = {}
+    for i, l in enumerate(cfg.layers):
+        if l.kind == "conv":
+            sp[f"conv{i}_w"] = Spec((l.kernel, l.kernel, l.ifm, l.ofm),
+                                    ("kernel", "kernel", "embed", "ff"))
+            sp[f"conv{i}_b"] = Spec((l.ofm,), ("ff",), init="zeros")
+        elif l.kind == "fc":
+            sp[f"fc{i}_w"] = Spec((l.ifm, l.ofm), ("embed", "ff"))
+            sp[f"fc{i}_b"] = Spec((l.ofm,), ("ff",), init="zeros")
+    return sp
+
+
+def init_params(cfg: CNNConfig, key: jax.Array):
+    return init_tree(param_specs(cfg), key)
+
+
+def forward(params, cfg: CNNConfig, x: jax.Array,
+            ctx: ShardingCtx = ShardingCtx(),
+            use_pallas: bool = False) -> jax.Array:
+    """x: (N, H, W, 3) -> logits (N, num_classes)."""
+    h = x
+    for i, l in enumerate(cfg.layers):
+        if l.kind == "conv":
+            w = params[f"conv{i}_w"]
+            if use_pallas:
+                h = kops.conv2d(h, w, stride=l.stride, padding=l.pad)
+            else:
+                h = kref.conv2d_ref(h, w, stride=l.stride, padding=l.pad)
+            h = jax.nn.relu(h + params[f"conv{i}_b"])
+            h = ctx.constrain(h, "batch", None, None, "ff")
+        elif l.kind == "pool":
+            h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+        elif l.kind == "fc":
+            if h.ndim == 4:
+                h = h.reshape(h.shape[0], -1)
+            h = h @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
+            last = (i == len(cfg.layers) - 1)
+            if not last:
+                h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params, cfg: CNNConfig, batch: dict,
+            ctx: ShardingCtx = ShardingCtx()) -> jax.Array:
+    logits = forward(params, cfg, batch["images"], ctx)
+    lf = logits.astype(jnp.float32)
+    nll = jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(
+        lf, batch["labels"][:, None], axis=-1)[:, 0]
+    return nll.mean()

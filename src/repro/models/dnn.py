@@ -1,0 +1,53 @@
+"""CD-DNN (paper §5.4): 7x2048 fully-connected ASR acoustic model.
+
+The paper's point with this network: all-FC topologies have far worse
+comp-to-comm ratios than CNNs, so hybrid parallelism (not pure data
+parallelism) is required — §3.2's rule 'ofm > minibatch => model parallel'
+holds for every hidden layer here.  Our sharding rules put the 2048-wide
+hidden dims on the 'model' axis accordingly.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DNNConfig
+from repro.core.params import Spec, init_tree
+from repro.core.sharding import ShardingCtx
+
+
+def param_specs(cfg: DNNConfig) -> Dict[str, Spec]:
+    dims = [cfg.input_dim] + [cfg.hidden_dim] * cfg.num_hidden \
+        + [cfg.output_dim]
+    sp = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        sp[f"w{i}"] = Spec((a, b), ("embed", "ff"))
+        sp[f"b{i}"] = Spec((b,), ("ff",), init="zeros")
+    return sp
+
+
+def init_params(cfg: DNNConfig, key: jax.Array):
+    return init_tree(param_specs(cfg), key)
+
+
+def forward(params, cfg: DNNConfig, x: jax.Array,
+            ctx: ShardingCtx = ShardingCtx()) -> jax.Array:
+    h = x
+    n_layers = cfg.num_hidden + 1
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.sigmoid(h)       # CD-DNN uses sigmoid hidden units
+            h = ctx.constrain(h, "batch", "ff")
+    return h
+
+
+def loss_fn(params, cfg: DNNConfig, batch: dict,
+            ctx: ShardingCtx = ShardingCtx()) -> jax.Array:
+    logits = forward(params, cfg, batch["frames"], ctx)
+    lf = logits.astype(jnp.float32)
+    nll = jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(
+        lf, batch["senones"][:, None], axis=-1)[:, 0]
+    return nll.mean()

@@ -1,0 +1,57 @@
+"""Modality-frontend STUBS — the single allowed carve-out (see brief).
+
+We do not implement a ViT or a conv audio codec.  ``input_specs`` (launch/
+dryrun) supplies pre-computed patch/frame embeddings of the right shape; for
+runnable examples and smoke tests these helpers synthesize deterministic
+embeddings/token streams (including MusicGen's codebook delay pattern, which
+is a data-layout property, not a codec property).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def vision_stub_embeds(key: jax.Array, batch: int, n_tokens: int,
+                       d_model: int, dtype=jnp.float32) -> jax.Array:
+    """Stand-in for ViT+projector output: (B, n_tokens, d_model)."""
+    return jax.random.normal(key, (batch, n_tokens, d_model), dtype) * 0.02
+
+
+def mrope_positions(batch: int, s_img: int, s_txt: int,
+                    grid_w: int = 32) -> jax.Array:
+    """Qwen2-VL M-RoPE positions (B, S, 3) = (t, h, w).
+    Image patches: t=0, (h, w) from the patch grid; text tokens: all three
+    components advance together starting after the image span."""
+    hh = jnp.arange(s_img) // grid_w
+    ww = jnp.arange(s_img) % grid_w
+    img = jnp.stack([jnp.zeros(s_img, jnp.int32), hh, ww], axis=-1)
+    start = jnp.maximum(hh[-1], ww[-1]) + 1 if s_img else 0
+    txt1 = start + jnp.arange(s_txt)
+    txt = jnp.stack([txt1, txt1, txt1], axis=-1)
+    pos = jnp.concatenate([img, txt], axis=0).astype(jnp.int32)
+    return jnp.broadcast_to(pos[None], (batch, s_img + s_txt, 3))
+
+
+def audio_stub_embeds(key: jax.Array, batch: int, seq: int,
+                      d_model: int, dtype=jnp.float32) -> jax.Array:
+    """Stand-in for summed EnCodec codebook embeddings: (B, S, d_model)."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02
+
+
+def delay_pattern(tokens: jax.Array, n_codebooks: int,
+                  pad_id: int = 0) -> jax.Array:
+    """MusicGen delay interleave: codebook k is shifted right by k steps.
+    tokens: (B, S, K) -> delayed (B, S, K)."""
+    B, S, K = tokens.shape
+    assert K == n_codebooks
+    cols = []
+    for k in range(K):
+        shifted = jnp.pad(tokens[:, : S - k, k], ((0, 0), (k, 0)),
+                          constant_values=pad_id)
+        cols.append(shifted)
+    return jnp.stack(cols, axis=-1)

@@ -1,0 +1,285 @@
+"""Mixture-of-Experts layer: top-k token-choice routing.
+
+Design notes (these are the paper's concerns mapped to MoE):
+  * Dispatch is PER SAMPLE (cumsum over the sequence dim only), so routing
+    needs zero cross-device communication under the hybrid mesh — the batch
+    dim stays on the data axes, expert weights shard their hidden dim on the
+    model axis ("tensor-parallel experts").  Neither assigned MoE arch has
+    E divisible by 16 (qwen: 60, mixtral: 8), so classic expert-parallel
+    all-to-all is not available on this mesh; see EXPERIMENTS.md §Perf for
+    the padded-experts variant.
+  * Train/prefill uses capacity-bounded scatter dispatch (tokens over
+    capacity are dropped, standard practice); decode (S==1) gathers the k
+    selected experts' weights instead — batched-einsum over all E experts
+    would inflate decode FLOPs by E/k.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec
+from repro.core.sharding import ShardingCtx
+from repro.models.layers import rms_norm
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    Ep = E + cfg.moe_expert_pad    # padded for expert-parallel sharding
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    sp = {
+        "router": Spec((d, E), ("embed", "experts")),
+        "w_gate": Spec((Ep, d, ff), ("experts", emb, "moe_ff")),
+        "w_up": Spec((Ep, d, ff), ("experts", emb, "moe_ff")),
+        "w_down": Spec((Ep, ff, d), ("experts", "moe_ff", emb)),
+        "norm": Spec((d,), ("embed",), init="zeros"),
+    }
+    if cfg.num_shared_experts:
+        sff = cfg.shared_expert_d_ff
+        sp.update({
+            "sh_gate": Spec((d, sff), (emb, "ff")),
+            "sh_up": Spec((d, sff), (emb, "ff")),
+            "sh_down": Spec((sff, d), ("ff", emb)),
+        })
+    return sp
+
+
+def _router(h: jax.Array, w: jax.Array, k: int):
+    """h: (..., d) -> (weights (..., k), idx (..., k), aux_loss scalar)."""
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    E = w.shape[-1]
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(-2)  # (..., E)
+    f_e = onehot.reshape(-1, E).mean(0) / k
+    p_e = probs.reshape(-1, E).mean(0)
+    aux = E * jnp.sum(f_e * p_e)
+    return top_w, top_i, aux
+
+
+def _expert_ffn(x: jax.Array, wg, wu, wd) -> jax.Array:
+    """x: (E, C, d) through per-expert SwiGLU."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg.astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", x, wu.astype(x.dtype))
+    return jnp.einsum("ecf,efd->ecd", g * u, wd.astype(x.dtype))
+
+
+def moe_ep_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                 ctx: ShardingCtx) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via EXPLICIT collectives (shard_map +
+    lax.all_to_all) — the beyond-paper §Perf optimization, in the paper's
+    own §3.4 style: GSPMD cannot derive an all-to-all from a scatter into an
+    expert-sharded buffer (measured: it replicates, 6x worse), so the
+    dispatch is written manually, exactly as the paper writes part-reduce /
+    part-broadcast manually.
+
+    Layout: experts sharded on "model" (E+pad divisible); tokens arrive
+    replicated across "model" (batch lives on the data axes).  Each model
+    shard routes its 1/n slice of the token-assignments, all-to-alls them to
+    the owning expert shards, runs its local experts, all-to-alls results
+    back, and the per-slice outputs are combined with a psum — ring volume
+    per layer ~ 2 x A2A(T/n tokens) + 2 x (B,S,d)/n vs TP-MoE's
+    2 x all-reduce((B,E,C,d)).
+    """
+    from jax import lax
+    mesh = ctx.mesh
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    Ep = E + cfg.moe_expert_pad
+    n = mesh.shape["model"]
+    E_loc = Ep // n
+    cf = cfg.moe_capacity_factor
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    h = ctx.constrain(h, "batch", "seq", "embed")
+    _, _, aux = _router(h, p["router"], k)   # aux on full (replicated) stats
+
+    P = jax.sharding.PartitionSpec
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+
+    def inner(h_loc, router_w, wg, wu, wd):
+        # h_loc: (B_loc, S, d) — replicated across "model"
+        B_loc = h_loc.shape[0]
+        i_shard = lax.axis_index("model")
+        T = B_loc * S * k
+        Ts = T // n                                   # this shard's slice
+        # route the full local batch, then take this shard's slice
+        logits = h_loc.astype(jnp.float32) @ router_w.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(probs, k)
+        top_w = (top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+                 ).reshape(T)
+        flat_i = top_i.reshape(T)
+        toks = jnp.repeat(h_loc.reshape(B_loc * S, d), k, axis=0)  # (T,d)
+        sl = lambda t: lax.dynamic_slice_in_dim(t, i_shard * Ts, Ts, 0)
+        my_i, my_w, my_toks = sl(flat_i), sl(top_w), sl(toks)
+        dest = my_i // E_loc                          # owning shard
+        e_loc = my_i % E_loc
+        # scatter my slice into per-dest buffers
+        C = max(1, int(Ts / n * cf))
+        oh = jax.nn.one_hot(dest, n, dtype=jnp.int32)
+        pos = ((jnp.cumsum(oh, 0) - oh) * oh).sum(-1)          # pos in dest
+        keep = pos < C
+        pos_c = jnp.minimum(pos, C - 1)
+        buf = jnp.zeros((n, C, d), h_loc.dtype).at[dest, pos_c].add(
+            my_toks * keep[:, None].astype(h_loc.dtype))
+        meta = jnp.full((n, C), -1, jnp.int32).at[dest, pos_c].max(
+            jnp.where(keep, e_loc, -1))
+        # ---- dispatch: tokens travel to their expert's shard ----
+        recv = lax.all_to_all(buf, "model", split_axis=0, concat_axis=0,
+                              tiled=True)             # (n, C, d)
+        recv_e = lax.all_to_all(meta, "model", split_axis=0, concat_axis=0,
+                                tiled=True)           # (n, C)
+        rt = recv.reshape(n * C, d)
+        re = recv_e.reshape(n * C)
+        valid = re >= 0
+        re_c = jnp.maximum(re, 0)
+        # local dispatch to this shard's experts
+        Ce = max(1, int(n * C / E_loc * cf))
+        ohe = jax.nn.one_hot(re_c, E_loc, dtype=jnp.int32)
+        pe = ((jnp.cumsum(ohe, 0) - ohe) * ohe).sum(-1)
+        keep_e = (pe < Ce) & valid
+        pe_c = jnp.minimum(pe, Ce - 1)
+        xe = jnp.zeros((E_loc, Ce, d), rt.dtype).at[re_c, pe_c].add(
+            rt * keep_e[:, None].astype(rt.dtype))
+        ye = _expert_ffn(xe, wg, wu, wd)              # fully local
+        out_t = ye[re_c, pe_c] * keep_e[:, None].astype(ye.dtype)
+        # ---- return: results travel back to the token's home shard ----
+        back = lax.all_to_all(out_t.reshape(n, C, d), "model",
+                              split_axis=0, concat_axis=0, tiled=True)
+        y_slice = back[dest, pos_c] * (keep[:, None]
+                                       * my_w[:, None]).astype(back.dtype)
+        # combine: fold the k assignments into token space FIRST (linear),
+        # then one (B*S, d) psum over shards — 1/k the reduction volume
+        tok_idx = (i_shard * Ts + jnp.arange(Ts)) // k
+        y_tok = jnp.zeros((B_loc * S, d), y_slice.dtype).at[tok_idx].add(
+            y_slice)
+        y_tok = lax.psum(y_tok, "model")
+        return y_tok.reshape(B_loc, S, d)
+
+    y = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(*bspec, None, None), P(), P("model"), P("model"),
+                  P("model")),
+        out_specs=P(*bspec, None, None),
+        check_vma=False,
+    )(h, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    y = ctx.constrain(y, "batch", "seq", "embed")
+
+    if cfg.num_shared_experts:
+        sg = jax.nn.silu(h @ p["sh_gate"].astype(h.dtype))
+        su = h @ p["sh_up"].astype(h.dtype)
+        sh = ctx.constrain(sg * su, "batch", "seq", "ff")
+        y = y + sh @ p["sh_down"].astype(h.dtype)
+        y = ctx.constrain(y, "batch", "seq", "embed")
+    return x + y, aux * cfg.router_aux_loss_coef
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (residual_out, aux_loss)."""
+    capacity_factor = cfg.moe_capacity_factor
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    if (cfg.moe_expert_pad and ctx.mesh is not None
+            and "model" in ctx.mesh.axis_names and S > 1
+            and (E + cfg.moe_expert_pad) % ctx.mesh.shape["model"] == 0):
+        return moe_ep_block(p, x, cfg, ctx)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    top_w, top_i, aux = _router(h, p["router"], k)      # (B,S,k)
+
+
+    if S == 1:
+        hv = h[:, 0]                                      # (B,d)
+        # dense-all-experts wins when every expert's weights are touched
+        # anyway (B*k >= E) — EXCEPT for FSDP weights on a single-pod mesh,
+        # where batch and weight-d_model contend for the same 'data' axis
+        # and GSPMD all-gathers the full expert weights (measured §Perf:
+        # 80 ms gather vs 457 ms dense on mixtral decode_32k 16x16, but
+        # 3.44 s gather vs 247 ms dense on 2x16x16).
+        dense_ok = B * k >= E and (
+            not cfg.fsdp or (ctx.mesh is not None
+                             and "pod" in ctx.mesh.axis_names))
+        if dense_ok:
+            # ---- batched decode: dense-all-experts. Decode is
+            # bandwidth-bound; with B*k >= E every expert's weights are
+            # read anyway, so computing all experts on all tokens and
+            # combining by the router one-hot moves each weight ONCE and
+            # keeps FSDP-sharded contractions local (tiny psums) — the
+            # per-token weight-gather alternative all-gathers (B,k,d,ff)
+            # slices (§Perf: 3 GB/layer on mixtral multi-pod decode).
+            g = jax.nn.silu(jnp.einsum("bd,edf->bef", hv,
+                                       p["w_gate"].astype(hv.dtype)))
+            u = jnp.einsum("bd,edf->bef", hv, p["w_up"].astype(hv.dtype))
+            gu = ctx.constrain(g * u, "batch", None, "moe_ff")
+            ye = jnp.einsum("bef,efd->bed", gu, p["w_down"].astype(hv.dtype))
+            sel = jax.nn.one_hot(top_i[:, 0], ye.shape[1],
+                                 dtype=ye.dtype)          # (B,k,E[+pad])
+            y = jnp.einsum("bed,bke,bk->bd", ye, sel,
+                           top_w[:, 0].astype(ye.dtype))[:, None]
+        else:
+            # ---- sparse decode: gather the k experts' weights per token
+            wg = jnp.take(p["w_gate"], top_i[:, 0], axis=0)  # (B,k,d,ff)
+            wu = jnp.take(p["w_up"], top_i[:, 0], axis=0)
+            wd = jnp.take(p["w_down"], top_i[:, 0], axis=0)
+            g = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", hv,
+                                       wg.astype(hv.dtype)))
+            u = jnp.einsum("bd,bkdf->bkf", hv, wu.astype(hv.dtype))
+            ye = jnp.einsum("bkf,bkfd->bkd", g * u, wd.astype(hv.dtype))
+            y = jnp.einsum("bkd,bk->bd", ye,
+                           top_w.astype(ye.dtype)[:, 0])[:, None]
+    else:
+        # ---- train/prefill: per-sample capacity-bounded scatter dispatch,
+        # written batch-leading (no vmap) so GSPMD keeps every tensor
+        # batch-sharded on the data axes and the expert einsums are local
+        # TP matmuls (moe_ff on 'model') — zero routing communication.
+        #
+        # Perf knobs (EXPERIMENTS.md §Perf):
+        #  * moe_expert_pad: experts dim padded to a multiple of the model
+        #    axis -> "experts" rule fires -> expert-parallel layout
+        #    (dispatch/undispatch become all-to-all, expert FFNs local);
+        #  * moe_down_rs: shard the down-proj output d -> the partial-sum
+        #    reduction becomes reduce-scatter instead of all-reduce.
+        Ep = E + cfg.moe_expert_pad
+        C = max(1, int(S * k / E * capacity_factor))
+        flat_i = top_i.reshape(B, S * k)
+        oh = jax.nn.one_hot(flat_i, Ep, dtype=jnp.int32)    # (B,S*k,Ep)
+        pos = jnp.cumsum(oh, axis=1) - oh                   # pos in expert
+        pos = (pos * oh).sum(-1)                            # (B,S*k)
+        keep = pos < C
+        pos_c = jnp.minimum(pos, C - 1)
+        xs = jnp.repeat(h, k, axis=1)                       # (B,S*k,d)
+        xs = xs * keep[..., None].astype(h.dtype)
+        b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * k))
+        xe = jnp.zeros((B, Ep, C, d), h.dtype).at[
+            b_idx, flat_i, pos_c].add(xs)
+        xe = ctx.constrain(xe, "batch", "experts", None, None)
+        g = jax.nn.silu(jnp.einsum("becd,edf->becf", xe,
+                                   p["w_gate"].astype(xe.dtype)))
+        u = jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(xe.dtype))
+        gu = ctx.constrain(g * u, "batch", "experts", None, "moe_ff")
+        ye = jnp.einsum("becf,efd->becd", gu, p["w_down"].astype(xe.dtype))
+        out_d = "moe_out" if cfg.moe_down_rs else None
+        ye = ctx.constrain(ye, "batch", "experts", None, out_d)
+        gathered = ye[b_idx, flat_i, pos_c]                 # (B,S*k,d)
+        gathered = ctx.constrain(gathered, "batch", None, out_d)
+        gathered = gathered * (keep[..., None]
+                               * top_w.reshape(B, S * k)[..., None]
+                               ).astype(ye.dtype)
+        y = gathered.reshape(B, S, k, d).sum(2)
+        y = ctx.constrain(y, "batch", "seq", out_d)
+    y = ctx.constrain(y, "batch", "seq", "embed")
+
+    if cfg.num_shared_experts:
+        sg = jax.nn.silu(h @ p["sh_gate"].astype(h.dtype))
+        su = h @ p["sh_up"].astype(h.dtype)
+        sh = ctx.constrain(sg * su, "batch", "seq", "ff")
+        y = y + sh @ p["sh_down"].astype(h.dtype)
+        y = ctx.constrain(y, "batch", "seq", "embed")
+    return x + y, aux * cfg.router_aux_loss_coef

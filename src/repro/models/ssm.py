@@ -1,0 +1,433 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), xLSTM (mLSTM + sLSTM).
+
+Training uses the chunk-parallel forms (quadratic within a chunk, linear
+scan across chunks) — the TPU-friendly formulation: chunk-local einsums hit
+the MXU, the cross-chunk scan is O(S/chunk) sequential steps.  Decode uses
+the recurrences directly with carried states.  Property tests check the
+chunked forms against naive per-step recurrences.
+
+Sharding: heads / inner dims carry the "ssm_heads"/"ssm_inner" logical axes
+(model-parallel); states are small and live per-device.  The sequence dim is
+never sharded (the scan is sequential) — per the paper's §3.3 argument that
+partitioning beyond minibatch+feature dims is sub-optimal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec
+from repro.core.sharding import ShardingCtx
+from repro.models.layers import rms_norm
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    din = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, din // 64)
+    P = din // H
+    return din, H, P
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d, N = cfg.d_model, cfg.ssm_state
+    din, H, P = mamba_dims(cfg)
+    cw = cfg.ssm_conv_width
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    return {
+        # order: [z(din), x(din), B(N), C(N), dt(H)]
+        "in_proj": Spec((d, 2 * din + 2 * N + H), (emb, "ssm_inner")),
+        "conv_w": Spec((cw, din + 2 * N), ("kernel", "ssm_inner"),
+                       init="normal", scale=0.5),
+        "conv_b": Spec((din + 2 * N,), ("ssm_inner",), init="zeros"),
+        "A_log": Spec((H,), ("ssm_heads",), init="ones"),
+        "D": Spec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": Spec((H,), ("ssm_heads",), init="zeros"),
+        "gate_norm": Spec((din,), ("ssm_inner",), init="zeros"),
+        "out_proj": Spec((din, d), ("ssm_inner", emb)),
+        "norm": Spec((d,), ("embed",), init="zeros"),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCache:
+    state: jax.Array       # (B, H, P, N)
+    conv: jax.Array        # (B, cw-1, din+2N) trailing inputs
+    length: jax.Array
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.float32) -> MambaCache:
+    din, H, P = mamba_dims(cfg)
+    N, cw = cfg.ssm_state, cfg.ssm_conv_width
+    return MambaCache(jnp.zeros((batch, H, P, N), dtype),
+                      jnp.zeros((batch, cw - 1, din + 2 * N), dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+def mamba_cache_axes():
+    return MambaCache(("batch", "ssm_heads", None, "ssm_state"),
+                      ("batch", None, "ssm_inner"), ())
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over seq.  xbc: (B,S,C); w: (cw,C)."""
+    cw = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], cw - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(cw))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int = 256,
+                init_state: Optional[jax.Array] = None):
+    """Chunk-parallel SSD (Mamba2, Dao & Gu 2024 minimal form).
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N) shared across heads.  Returns (y (B,S,H,P),
+    final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                    # (b,c,l,h) negative
+    cs = jnp.cumsum(dA, axis=2)                          # inclusive cumsum
+    # intra-chunk decay matrix T[l,m] = exp(cs_l - cs_m), l >= m.
+    # Mask the EXPONENT, not the result: for m > l the difference is
+    # positive and exp() overflows, and `where(mask, inf, 0)` still sends
+    # NaN through the backward pass.
+    l_idx = jnp.arange(chunk)
+    tri = l_idx[:, None] >= l_idx[None, :]
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]           # (b,c,l,m,h)
+    diff = jnp.where(tri[None, None, :, :, None], diff, -1e30)
+    Tmat = jnp.exp(diff)
+    # Y_diag[l] = C_l . sum_m T[l,m] dt_m B_m x_m
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)       # (b,c,l,m)
+    w_lm = scores[..., None] * Tmat * dtc[:, :, None, :, :]   # (b,c,l,m,h)
+    y_diag = jnp.einsum("bclmh,bcmhp->bclhp", w_lm, xc)
+    # chunk-final states: sum_m exp(cs_last - cs_m) dt_m B_m (x)_m
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)        # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclh,bclhp->bchpn",
+                        Bc, decay_to_end, dtc, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (b,c,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                    # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * dec[:, :, None, None] + st
+        return new, prev
+
+    init = (init_state if init_state is not None
+            else jnp.zeros((Bsz, H, P, N), x.dtype))
+    final, prev_states = lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,c,h,p,n)
+    # inter-chunk contribution: C_l . prev_state decayed to l
+    in_decay = jnp.exp(cs)                               # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, in_decay)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+                cache: Optional[MambaCache] = None):
+    """Pre-norm Mamba2 block.  Returns (residual_out, new_cache_or_None)."""
+    Bsz, S, d = x.shape
+    din, H, P = mamba_dims(cfg)
+    N = cfg.ssm_state
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = h @ p["in_proj"].astype(h.dtype)
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+
+    new_cache = None
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    if cache is not None and S == 1:
+        xbc_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache.conv)
+        conv_new = jnp.concatenate([cache.conv[:, 1:], xbc], axis=1)
+        xs_c, Bc, Cc = jnp.split(xbc_conv, [din, din + N], axis=-1)
+        xh = xs_c.reshape(Bsz, 1, H, P)[:, 0]            # (b,h,p)
+        dA = jnp.exp(dt[:, 0] * A[None, :])              # (b,h)
+        st = cache.state * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xh, Bc[:, 0])
+        y = jnp.einsum("bhpn,bn->bhp", st, Cc[:, 0])
+        y = y + p["D"].astype(y.dtype)[None, :, None] * xh
+        y = y.reshape(Bsz, 1, din)
+        new_cache = MambaCache(st, conv_new, cache.length + 1)
+    else:
+        xbc_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs_c, Bc, Cc = jnp.split(xbc_conv, [din, din + N], axis=-1)
+        xh = xs_c.reshape(Bsz, S, H, P)
+        xh = ctx.constrain(xh, "batch", "seq", "ssm_heads", None)
+        y, final = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                               Bc.astype(jnp.float32),
+                               Cc.astype(jnp.float32))
+        y = y + p["D"].astype(y.dtype)[None, None, :, None] \
+            * xh.astype(y.dtype)
+        y = y.reshape(Bsz, S, din).astype(x.dtype)
+        if cache is not None:
+            cw = cfg.ssm_conv_width
+            conv_new = xbc[:, -(cw - 1):].astype(jnp.float32)
+            new_cache = MambaCache(final, conv_new,
+                                   jnp.asarray(S, jnp.int32))
+    # gated output norm (Mamba2): y * silu(z), RMS-normed
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gate_norm"],
+                 cfg.norm_eps)
+    y = ctx.constrain(y, "batch", "seq", "ssm_inner")
+    out = y @ p["out_proj"].astype(y.dtype)
+    out = ctx.constrain(out, "batch", "seq", "embed")
+    return x + out, new_cache
+
+
+# ===========================================================================
+# xLSTM — mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar, scan)
+# ===========================================================================
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    din = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    P = din // H
+    return din, H, P
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din, H, P = mlstm_dims(cfg)
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    return {
+        "up_proj": Spec((d, 2 * din), (emb, "ssm_inner")),
+        "wq": Spec((din, din), ("ssm_inner", None)),
+        "wk": Spec((din, din), ("ssm_inner", None)),
+        "wv": Spec((din, din), ("ssm_inner", None)),
+        "w_if": Spec((din, 2 * H), ("ssm_inner", "ssm_heads")),
+        "b_if": Spec((2 * H,), ("ssm_heads",), init="zeros"),
+        "out_norm": Spec((din,), ("ssm_inner",), init="zeros"),
+        "down_proj": Spec((din, d), ("ssm_inner", emb)),
+        "norm": Spec((d,), ("embed",), init="zeros"),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MlstmCache:
+    C: jax.Array          # (B, H, P, P) matrix memory
+    n: jax.Array          # (B, H, P) normalizer
+    m: jax.Array          # (B, H) max-stabilizer (log domain)
+    length: jax.Array
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.float32) -> MlstmCache:
+    _, H, P = mlstm_dims(cfg)
+    return MlstmCache(jnp.zeros((batch, H, P, P), dtype),
+                      jnp.zeros((batch, H, P), dtype),
+                      jnp.full((batch, H), -1e30, dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+def mlstm_cache_axes():
+    return MlstmCache(("batch", "ssm_heads", None, None),
+                      ("batch", "ssm_heads", None),
+                      ("batch", "ssm_heads"), ())
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk: int,
+                      cache: Optional[MlstmCache]):
+    """Stabilized chunk-parallel mLSTM.
+
+    q,k,v: (B,S,H,P); log_f, log_i: (B,S,H).  Returns (y, final cache parts).
+    Recurrence: C_t = f_t C_{t-1} + i_t k_t v_t^T; n_t = f_t n_{t-1} + i_t k_t
+                y_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t)).
+    """
+    B, S, H, P = q.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    rs = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+    qc, kc, vc = rs(q), rs(k), rs(v)                 # (nc,B,l,H,P)
+    fc, ic = rs(log_f), rs(log_i)                    # (nc,B,l,H)
+
+    if cache is None:
+        C0 = jnp.zeros((B, H, P, P), jnp.float32)
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = (cache.C.astype(jnp.float32),
+                      cache.n.astype(jnp.float32),
+                      cache.m.astype(jnp.float32))
+
+    tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+
+    def body(carry, inp):
+        Cp, np_, mp = carry
+        qb, kb, vb, fb, ib = inp
+        qb = qb / (P ** 0.5)                         # one consistent scale
+        F = jnp.cumsum(fb, axis=1)                   # (B,l,H) inclusive
+        # intra-chunk log weights D[l,m] = F_l - F_m + i_m  (m <= l)
+        Dlm = F[:, :, None, :] - F[:, None, :, :] + ib[:, None, :, :]
+        Dlm = jnp.where(tri[None, :, :, None], Dlm, -1e30)
+        # inter-chunk log weight for query l: F_l + m_prev
+        Dcarry = F + mp[:, None, :]                  # (B,l,H)
+        M = jnp.maximum(Dlm.max(axis=2), Dcarry)     # (B,l,H) per-query max
+        w_in = jnp.exp(Dlm - M[:, :, None, :])       # (B,l,m,H)
+        w_car = jnp.exp(Dcarry - M)                  # (B,l,H)
+        scores = jnp.einsum("blhp,bmhp->blmh", qb, kb)
+        y_num = jnp.einsum("blmh,blmh,bmhp->blhp", scores, w_in, vb) \
+            + jnp.einsum("blhp,bhpq,blh->blhq", qb, Cp, w_car)
+        # normalizer: n_l = sum_m w_in[l,m] k_m + w_car[l] n_prev; denom = |n_l . q_l|
+        n_vec = jnp.einsum("blmh,bmhp->blhp", w_in, kb) \
+            + w_car[..., None] * np_[:, None]
+        denom = jnp.abs(jnp.einsum("blhp,blhp->blh", n_vec, qb))
+        y = y_num / jnp.maximum(denom, jnp.exp(-M))[..., None]
+        # ---- carry update to end of chunk ----
+        F_last = F[:, -1]                            # (B,H)
+        m_new = jnp.maximum(F_last + mp, (F_last[:, None] - F + ib).max(1))
+        w_state = jnp.exp(F_last[:, None] - F + ib - m_new[:, None])  # (B,l,H)
+        C_new = jnp.exp(F_last + mp - m_new)[:, :, None, None] * Cp \
+            + jnp.einsum("blh,blhp,blhq->bhpq", w_state, kb, vb)
+        n_new = jnp.exp(F_last + mp - m_new)[..., None] * np_ \
+            + jnp.einsum("blh,blhp->bhp", w_state, kb)
+        return (C_new, n_new, m_new), y
+
+    (Cf, nf, mf), ys = lax.scan(body, (C0, n0, m0), (qc, kc, vc, fc, ic))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, (Cf, nf, mf)
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+                cache: Optional[MlstmCache] = None, chunk: int = 256):
+    Bsz, S, d = x.shape
+    din, H, P = mlstm_dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    u, z = jnp.split(h @ p["up_proj"].astype(h.dtype), 2, axis=-1)
+    u = ctx.constrain(u, "batch", "seq", "ssm_inner")
+    q = (u @ p["wq"].astype(u.dtype)).reshape(Bsz, S, H, P).astype(jnp.float32)
+    k = (u @ p["wk"].astype(u.dtype)).reshape(Bsz, S, H, P).astype(jnp.float32)
+    v = (u @ p["wv"].astype(u.dtype)).reshape(Bsz, S, H, P).astype(jnp.float32)
+    gates = u @ p["w_if"].astype(u.dtype) + p["b_if"].astype(u.dtype)
+    log_i, f_pre = jnp.split(gates.reshape(Bsz, S, 2, H), 2, axis=2)
+    log_i = log_i[:, :, 0].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre[:, :, 0].astype(jnp.float32))
+
+    y, (Cf, nf, mf) = _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk, cache)
+    new_cache = None
+    if cache is not None:
+        new_cache = MlstmCache(Cf, nf, mf, cache.length + S)
+    y = y.reshape(Bsz, S, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["down_proj"].astype(y.dtype)
+    out = ctx.constrain(out, "batch", "seq", "embed")
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    return {
+        "W": Spec((d, 4 * d), (emb, "ssm_inner")),
+        "R": Spec((H, P, 4 * P), ("ssm_heads", None, None), init="normal",
+                  scale=0.02),
+        "b": Spec((4 * d,), ("ssm_inner",), init="zeros"),
+        "out_norm": Spec((d,), ("embed",), init="zeros"),
+        "out_proj": Spec((d, d), (emb, emb)),
+        "norm": Spec((d,), ("embed",), init="zeros"),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class SlstmCache:
+    h: jax.Array   # (B, d)
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    m: jax.Array   # (B, d)
+    length: jax.Array
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.float32) -> SlstmCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), dtype)
+    return SlstmCache(z, z, z, jnp.full((batch, d), -1e30, dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+def slstm_cache_axes():
+    a = ("batch", "embed")
+    return SlstmCache(a, a, a, a, ())
+
+
+def _slstm_step(p, H, P, carry, wx):
+    """One sLSTM step; wx: (B, 4d) = W x + b precomputed; carry (h,c,n,m)."""
+    h, c, n, m = carry
+    B = h.shape[0]
+    hh = h.reshape(B, H, P)
+    rec = jnp.einsum("bhp,hpq->bhq", hh, p["R"]).reshape(B, 4 * H * P)
+    z_pre, i_pre, f_pre, o_pre = jnp.split(wx + rec, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+                cache: Optional[SlstmCache] = None):
+    Bsz, S, d = x.shape
+    H = cfg.num_heads
+    P = d // H
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    wx = (h @ p["W"].astype(h.dtype) + p["b"].astype(h.dtype)
+          ).astype(jnp.float32)
+    if cache is None:
+        z = jnp.zeros((Bsz, d), jnp.float32)
+        carry = (z, z, z, jnp.full((Bsz, d), -1e30, jnp.float32))
+    else:
+        carry = (cache.h.astype(jnp.float32), cache.c.astype(jnp.float32),
+                 cache.n.astype(jnp.float32), cache.m.astype(jnp.float32))
+
+    def step(cr, wxt):
+        new = _slstm_step(p, H, P, cr, wxt)
+        return new, new[0]
+
+    (hf, cf, nf, mf), ys = lax.scan(step, carry, wx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)           # (B,S,d)
+    new_cache = None
+    if cache is not None:
+        new_cache = SlstmCache(hf, cf, nf, mf, cache.length + S)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(y.dtype)
+    out = ctx.constrain(out, "batch", "seq", "embed")
+    return x + out, new_cache

@@ -1,0 +1,353 @@
+"""Config-driven decoder assembly for all ten assigned architectures.
+
+The layer stack is ``pattern_repeats`` x ``block_pattern`` (the repeating
+heterogeneous unit: e.g. gemma2's (local, global), zamba2's 5x mamba +
+shared-attention).  We ``lax.scan`` over the repeats with per-repeat params
+stacked on a leading axis — HLO size and compile time are then independent
+of depth, which matters when lowering 56-layer models for 512 devices.
+
+Zamba2's shared attention block is weight-SHARED across repeats: its params
+are not stacked; the scan body closes over them.
+
+Caches (decode/prefill) mirror the same structure: a tuple (one entry per
+pattern position) of per-repeat-stacked cache pytrees, scanned alongside the
+params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (
+    ModelConfig, ATTN_GLOBAL, ATTN_LOCAL, BLOCK_MAMBA, BLOCK_SHARED_ATTN,
+    BLOCK_MLSTM, BLOCK_SLSTM,
+)
+from repro.core.params import Spec, init_tree, axes_tree as _axes_tree
+from repro.core.sharding import ShardingCtx
+from repro.models import layers, moe, ssm
+from repro.models.layers import AttnCache, attention_block, mlp_block, rms_norm
+
+# register cache dataclasses as pytrees
+for _cls in (layers.AttnCache, ssm.MambaCache, ssm.MlstmCache, ssm.SlstmCache):
+    try:
+        jax.tree_util.register_dataclass(
+            _cls, data_fields=[f for f in _cls.__dataclass_fields__],
+            meta_fields=[])
+    except ValueError:
+        pass  # already registered
+
+
+# ---------------------------------------------------------------------------
+# per-block param specs
+# ---------------------------------------------------------------------------
+def _block_specs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        sp = {"attn": layers.attn_specs(cfg)}
+        if cfg.num_experts:
+            sp["moe"] = moe.moe_specs(cfg)
+        else:
+            sp["mlp"] = layers.mlp_specs(cfg)
+        return sp
+    if kind == BLOCK_SHARED_ATTN:
+        return {"attn": layers.attn_specs(cfg), "mlp": layers.mlp_specs(cfg)}
+    if kind == BLOCK_MAMBA:
+        return {"mamba": ssm.mamba_specs(cfg)}
+    if kind == BLOCK_MLSTM:
+        return {"mlstm": ssm.mlstm_specs(cfg)}
+    if kind == BLOCK_SLSTM:
+        return {"slstm": ssm.slstm_specs(cfg)}
+    raise ValueError(kind)
+
+
+def _stack_specs(sp, repeats: int):
+    return jax.tree.map(
+        lambda s: Spec((repeats,) + s.shape, (None,) + s.axes, s.init, s.scale),
+        sp, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {
+        "embed": Spec((V, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "final_norm": Spec((d,), ("embed",), init="zeros"),
+    }
+    blocks = []
+    for kind in cfg.block_pattern:
+        if kind == BLOCK_SHARED_ATTN:
+            blocks.append({})   # shared: params live outside the stack
+        else:
+            blocks.append(_stack_specs(_block_specs(cfg, kind),
+                                       cfg.pattern_repeats))
+    specs["blocks"] = tuple(blocks)
+    if BLOCK_SHARED_ATTN in cfg.block_pattern:
+        specs["shared"] = _block_specs(cfg, BLOCK_SHARED_ATTN)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = Spec((d, V), ("embed", "vocab"))
+    if cfg.num_codebooks:
+        specs["codebook_heads"] = Spec((cfg.num_codebooks, d, V),
+                                       ("codebooks", "embed", "vocab"))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return init_tree(param_specs(cfg), key, dtype)
+
+
+def param_axes(cfg: ModelConfig):
+    return _axes_tree(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def effective_window(cfg: ModelConfig, kind: str, long_ctx: bool) -> int:
+    """Attention window per block kind; ``long_ctx`` swaps full attention for
+    the documented sliding-window variant (DESIGN.md long_500k policy)."""
+    if kind == ATTN_LOCAL:
+        return cfg.sliding_window
+    if kind in (ATTN_GLOBAL, BLOCK_SHARED_ATTN):
+        return cfg.long_context_window if long_ctx else 0
+    return 0
+
+
+def init_caches(cfg: ModelConfig, batch: int, context_len: int,
+                long_ctx: bool = False, dtype=jnp.bfloat16):
+    """Tuple (per pattern entry) of per-repeat-stacked caches."""
+    R = cfg.pattern_repeats
+
+    def stack(make_one):
+        ones = [make_one() for _ in range(R)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ones)
+
+    caches = []
+    for kind in cfg.block_pattern:
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN):
+            w = effective_window(cfg, kind, long_ctx)
+            cap = min(w, context_len) if w else context_len
+            caches.append(stack(
+                lambda cap=cap: layers.init_attn_cache(cfg, batch, cap, dtype)))
+        elif kind == BLOCK_MAMBA:
+            caches.append(stack(lambda: ssm.init_mamba_cache(cfg, batch)))
+        elif kind == BLOCK_MLSTM:
+            caches.append(stack(lambda: ssm.init_mlstm_cache(cfg, batch)))
+        elif kind == BLOCK_SLSTM:
+            caches.append(stack(lambda: ssm.init_slstm_cache(cfg, batch)))
+    return tuple(caches)
+
+
+def cache_axes(cfg: ModelConfig):
+    out = []
+    for kind in cfg.block_pattern:
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN):
+            ax = layers.attn_cache_axes()
+        elif kind == BLOCK_MAMBA:
+            ax = ssm.mamba_cache_axes()
+        elif kind == BLOCK_MLSTM:
+            ax = ssm.mlstm_cache_axes()
+        else:
+            ax = ssm.slstm_cache_axes()
+        out.append(jax.tree.map(
+            lambda a: (None,) + a if isinstance(a, tuple) else (None,),
+            ax, is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _apply_block(kind: str, p, shared_p, x, cfg: ModelConfig,
+                 ctx: ShardingCtx, positions, *, long_ctx: bool,
+                 cache, update_cache: bool):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN):
+        pp = shared_p if kind == BLOCK_SHARED_ATTN else p
+        w = effective_window(cfg, kind, long_ctx)
+        x, new_cache = attention_block(
+            pp["attn"], x, cfg, ctx, positions, window=w, cache=cache,
+            update_cache=update_cache)
+        if "moe" in (pp or {}):
+            x, aux = moe.moe_block(pp["moe"], x, cfg, ctx)
+        else:
+            x = mlp_block(pp["mlp"], x, cfg, ctx)
+    elif kind == BLOCK_MAMBA:
+        x, new_cache = ssm.mamba_block(p["mamba"], x, cfg, ctx, cache=cache)
+    elif kind == BLOCK_MLSTM:
+        x, new_cache = ssm.mlstm_block(p["mlstm"], x, cfg, ctx, cache=cache)
+    elif kind == BLOCK_SLSTM:
+        x, new_cache = ssm.slstm_block(p["slstm"], x, cfg, ctx, cache=cache)
+    else:
+        raise ValueError(kind)
+    return x, aux, new_cache
+
+
+def make_scan_body(cfg: ModelConfig, ctx: ShardingCtx, shared_p, positions, *,
+                   long_ctx: bool, update_cache: bool, have_cache: bool):
+    """The per-repeat scan body: one application of the block pattern.
+    Exposed so launch/dryrun can lower a single unit separately (XLA cost
+    analysis counts a while-loop body once; the dry-run corrects totals with
+    ``full + (R-1) * unit``)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        if have_cache:
+            block_params, block_caches = xs
+        else:
+            block_params, block_caches = xs, None
+        new_caches = []
+        for j, kind in enumerate(cfg.block_pattern):
+            cache_j = block_caches[j] if have_cache else None
+            h, aux_j, nc = _apply_block(
+                kind, block_params[j], shared_p, h, cfg, ctx, positions,
+                long_ctx=long_ctx, cache=cache_j, update_cache=update_cache)
+            aux = aux + aux_j
+            if have_cache:
+                new_caches.append(nc if nc is not None else cache_j)
+        if cfg.seq_shard_carry and h.shape[1] > 1:
+            # Megatron-style sequence parallelism for the residual stream:
+            # the remat-saved carry is stored seq-sharded on 'model'
+            # (16x less HBM per saved layer input); blocks re-gather.
+            h = ctx.constrain(h, "batch", "seq_res", "embed")
+        return (h, aux), (tuple(new_caches) if have_cache else None)
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "block_dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return body
+
+
+def forward(params, cfg: ModelConfig, ctx: ShardingCtx, *,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            caches=None, update_cache: bool = False,
+            long_ctx: bool = False, return_hidden: bool = False):
+    """Returns (logits, aux_loss, new_caches).
+
+    ``tokens`` (B,S) and/or ``embeds`` (B,S_e,d) — for VLM the two are
+    concatenated (vision first); for audio only embeds are used.
+    ``positions``: (B,S) int or (B,S,3) for M-RoPE; derived if None.
+    """
+    emb_scale = jnp.asarray(cfg.d_model ** 0.5, jnp.float32)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(jnp.bfloat16))
+    if tokens is not None:
+        te = jnp.take(params["embed"], tokens, axis=0) * emb_scale
+        parts.append(te.astype(jnp.bfloat16))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    B, S, _ = x.shape
+    x = ctx.constrain(x, "batch", "seq", "embed")
+
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.arange(S), (B, S))
+        positions = (jnp.repeat(pos1[..., None], 3, axis=-1)
+                     if cfg.mrope else pos1)
+
+    shared_p = params.get("shared")
+    R = cfg.pattern_repeats
+    have_cache = caches is not None
+    aux0 = jnp.zeros((), jnp.float32)
+    body = make_scan_body(cfg, ctx, shared_p, positions,
+                          long_ctx=long_ctx, update_cache=update_cache,
+                          have_cache=have_cache)
+
+    xs = (params["blocks"], caches) if have_cache else params["blocks"]
+    (x, aux), new_caches = lax.scan(body, (x, aux0), xs)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux, (new_caches if have_cache else None)
+    if cfg.num_codebooks:
+        logits = jnp.einsum("bsd,kdv->bskv", x,
+                            params["codebook_heads"].astype(x.dtype))
+    elif cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = ctx.constrain(logits, "batch", "seq", None, "vocab") \
+        if cfg.num_codebooks else ctx.constrain(logits, "batch", "seq", "vocab")
+    return logits, aux, (new_caches if have_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def _ce(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def chunked_lm_loss(params, cfg: ModelConfig, ctx: ShardingCtx,
+                    hidden: jax.Array, labels: jax.Array,
+                    n_chunks: int) -> jax.Array:
+    """CE computed over sequence chunks so the (B, S, V) f32 logits tensor
+    is never materialized whole (perf knob ``loss_chunk``; the LM head is
+    the biggest single activation for 128k–256k vocabularies)."""
+    B, S, d = hidden.shape
+    Sm1 = S - 1
+    chunk = -(-Sm1 // n_chunks)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    total = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        lo = i * chunk
+        hi = min(lo + chunk, Sm1)
+        if lo >= hi:
+            break
+        hc = hidden[:, lo:hi]
+        logits = hc @ w.astype(hc.dtype)
+        if cfg.final_logit_softcap:
+            c = cfg.final_logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        logits = ctx.constrain(logits, "batch", "seq", "vocab")
+        lf = logits.astype(jnp.float32)
+        # hidden positions lo..hi-1 predict tokens lo+1..hi
+        nll = jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(
+            lf, labels[:, lo + 1:hi + 1, None], axis=-1)[..., 0]
+        total = total + nll.sum()
+    return total / (B * Sm1)
+
+
+def lm_loss(params, cfg: ModelConfig, ctx: ShardingCtx, batch: dict):
+    """Next-token CE for every family.  batch keys:
+    tokens (B,S) [dense/moe/ssm/hybrid]; + patch_embeds for vlm;
+    frame_embeds + codebook_labels (B,S,K) for audio."""
+    if cfg.loss_chunk and cfg.frontend is None and not cfg.num_codebooks:
+        hidden, aux, _ = forward(params, cfg, ctx, tokens=batch["tokens"],
+                                 return_hidden=True)
+        loss = chunked_lm_loss(params, cfg, ctx, hidden,
+                               batch["tokens"], cfg.loss_chunk)
+        return loss + aux
+    if cfg.frontend == "audio":
+        logits, aux, _ = forward(params, cfg, ctx,
+                                 embeds=batch["frame_embeds"])
+        labels = batch["codebook_labels"]                  # (B,S,K)
+        loss = _ce(logits[:, :-1], labels[:, 1:])
+        return loss + aux
+    if cfg.frontend == "vision":
+        logits, aux, _ = forward(params, cfg, ctx, tokens=batch["tokens"],
+                                 embeds=batch["patch_embeds"],
+                                 positions=batch.get("positions"))
+        S_img = batch["patch_embeds"].shape[1]
+        txt_logits = logits[:, S_img:-1]
+        labels = batch["tokens"][:, 1:]
+        loss = _ce(txt_logits, labels)
+        return loss + aux
+    logits, aux, _ = forward(params, cfg, ctx, tokens=batch["tokens"])
+    loss = _ce(logits[:, :-1], batch["tokens"][:, 1:])
+    return loss + aux

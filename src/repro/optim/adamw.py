@@ -1,0 +1,45 @@
+"""AdamW — for the transformer-family architectures (beyond-paper substrate;
+the paper's CNN/DNN experiments use momentum SGD)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p)
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params, lr
+               ) -> Tuple[Any, AdamWState]:
+        c = state.count + 1
+        bc1 = 1 - self.b1 ** c.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** c.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda g, m: self.b1 * m + (1 - self.b1) * g,
+                          grads, state.mu)
+        nu = jax.tree.map(lambda g, v: self.b2 * v + (1 - self.b2) * g * g,
+                          grads, state.nu)
+        new_params = jax.tree.map(
+            lambda p, m, v: p - lr * ((m / bc1) / (jnp.sqrt(v / bc2)
+                                                   + self.eps)
+                                      + self.weight_decay * p),
+            params, mu, nu)
+        return new_params, AdamWState(mu, nu, c)

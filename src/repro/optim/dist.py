@@ -1,0 +1,118 @@
+"""Paper §3.4 — the distributed synchronous-SGD update, explicitly.
+
+Between local weight-gradient computation and the SGD step, gradients are
+**part-reduce**d over the data-parallel group: each group member receives the
+fully-reduced gradient for a 1/G strip of every tensor.  The member applies
+the optimizer to ITS strip only (optimizer state exists only for the strip —
+the paper's scheme is ZeRO-1 avant la lettre), then **part-broadcast**s the
+updated strip so every member again holds the full weights before the next
+forward pass.
+
+This module is the explicit shard_map realization, used by the
+data-parallel examples and by the equivalence property tests
+(distributed update == serial update, to float tolerance).  The production
+pjit path reaches the same communication pattern through GSPMD when the
+optimizer state carries data-axis sharding (see train/train_step.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import NamedSharding
+
+from repro.core.collectives import (
+    axis_size, flatten_pad, padded_size, part_broadcast, part_reduce,
+    strip_broadcast, strip_reduce, unflatten,
+)
+
+
+def _flat_index(axis_names) -> jax.Array:
+    if isinstance(axis_names, str):
+        return lax.axis_index(axis_names)
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",)):
+    """Build (init_fn, update_fn) realizing the paper's update under
+    shard_map over ``data_axes``.  Params/grads enter replicated across the
+    data axes (grads are the LOCAL minibatch-shard gradients, summed over
+    local samples); optimizer state lives as per-member strips sharded on
+    dim 0.
+
+    update_fn(params, grads, opt_state, lr) -> (new_params, new_opt_state)
+    """
+    axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    axis_arg = axes if len(axes) > 1 else axes[0]
+    G = 1
+    for a in axes:
+        G *= mesh.shape[a]
+
+    def _strip_init(params):
+        def per_tensor(p):
+            flat = flatten_pad(p, G)
+            strip = flat.reshape(G, -1)
+            return strip  # (G, n/G): dim 0 sharded over the data axes
+        strips = jax.tree.map(per_tensor, params)
+        return optimizer.init(strips)
+
+    def _state_spec(s) -> P:
+        # strip tensors are (G, n/G): dim 0 sharded; scalars (e.g. AdamW
+        # step count) replicated
+        return P(axis_arg) if getattr(s, "ndim", 0) >= 2 else P()
+
+    def init_fn(params):
+        template = jax.eval_shape(_strip_init, params)
+        out_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, _state_spec(s)), template)
+        # build strip-shaped state: (G, n/G) per tensor, dim0 sharded
+        with jax.set_mesh(mesh):
+            return jax.jit(_strip_init, out_shardings=out_shardings)(params)
+
+    def _update(params, grads, opt_state, lr):
+        flat_params, treedef = jax.tree.flatten(params)
+        flat_grads = jax.tree.leaves(grads)
+
+        # 1) part-reduce every gradient into this member's strip (mean)
+        g_strips = [strip_reduce(g, axis_arg) for g in flat_grads]
+        # 2) slice this member's strip of the (replicated) params
+        i = _flat_index(axis_arg)
+        p_strips = []
+        for p in flat_params:
+            flat = flatten_pad(p, G)
+            n = flat.size // G
+            p_strips.append(lax.dynamic_slice(flat, (i * n,), (n,)))
+        # 3) serial optimizer on the strips (opt_state enters as the local
+        #    strip because shard_map in_specs split dim 0)
+        g_tree = jax.tree.unflatten(treedef, g_strips)
+        p_tree = jax.tree.unflatten(treedef, p_strips)
+        s_local = jax.tree.map(
+            lambda s: s[0] if s.ndim >= 2 else s, opt_state)
+        new_p_strips, new_state = optimizer.update(g_tree, s_local, p_tree, lr)
+        # 4) part-broadcast updated strips back to full tensors
+        new_flat = []
+        for p, ps in zip(flat_params, jax.tree.leaves(new_p_strips)):
+            new_flat.append(strip_broadcast(ps, axis_arg, p.shape))
+        new_params = jax.tree.unflatten(treedef, new_flat)
+        new_state = jax.tree.map(
+            lambda s: s[None] if s.ndim >= 1 else s, new_state)
+        return new_params, new_state
+
+    def update_fn(params, grads, opt_state, lr):
+        pspec = jax.tree.map(lambda _: P(), params)
+        sspec = jax.tree.map(_state_spec, opt_state)
+        fn = jax.shard_map(
+            _update, mesh=mesh,
+            in_specs=(pspec, pspec, sspec, P()),
+            out_specs=(pspec, sspec),
+            check_vma=False)
+        return fn(params, grads, opt_state, lr)
+
+    return init_fn, update_fn

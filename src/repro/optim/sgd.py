@@ -1,0 +1,30 @@
+"""Momentum SGD — the paper's optimizer (synchronous, no hyperparameter
+changes: the distributed update is bitwise the serial algorithm on the
+summed minibatch gradient)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SgdState(NamedTuple):
+    velocity: Any
+
+
+@dataclass(frozen=True)
+class MomentumSGD:
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+
+    def init(self, params) -> SgdState:
+        return SgdState(jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, grads, state: SgdState, params, lr) -> Tuple[Any, SgdState]:
+        new_vel = jax.tree.map(
+            lambda g, v, p: self.momentum * v + g + self.weight_decay * p,
+            grads, state.velocity, params)
+        new_params = jax.tree.map(lambda p, v: p - lr * v, params, new_vel)
+        return new_params, SgdState(new_vel)

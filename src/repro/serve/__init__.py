@@ -1,0 +1,1 @@
+from repro.serve.decode import decode_step, generate, prefill  # noqa: F401

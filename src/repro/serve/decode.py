@@ -1,0 +1,75 @@
+"""Serving: batched prefill + incremental decode over ring-buffered caches.
+
+``prefill`` runs the full-sequence forward and fills the caches;
+``decode_step`` consumes ONE token per request (this is what decode_32k /
+long_500k lower in the dry-run); ``generate`` drives greedy/temperature
+sampling for the examples."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sharding import ShardingCtx
+from repro.models import transformer
+
+
+def prefill(params, cfg: ModelConfig, ctx: ShardingCtx, tokens: jax.Array,
+            capacity: int, *, embeds: Optional[jax.Array] = None,
+            long_ctx: bool = False):
+    """tokens: (B, S).  Returns (last_logits (B, V), caches)."""
+    B = tokens.shape[0] if tokens is not None else embeds.shape[0]
+    caches = transformer.init_caches(cfg, B, capacity, long_ctx=long_ctx)
+    logits, _, caches = transformer.forward(
+        params, cfg, ctx, tokens=tokens, embeds=embeds, caches=caches,
+        update_cache=True, long_ctx=long_ctx)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, ctx: ShardingCtx,
+                tokens: jax.Array, pos: jax.Array, caches, *,
+                long_ctx: bool = False):
+    """tokens: (B, 1) the latest sampled token; pos: () or (B,) absolute
+    position.  Returns (logits (B, V), new_caches)."""
+    B = tokens.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1), (B, 1))
+    if cfg.mrope:
+        pos_b = jnp.repeat(pos_b[..., None], 3, axis=-1)
+    logits, _, caches = transformer.forward(
+        params, cfg, ctx, tokens=tokens, positions=pos_b, caches=caches,
+        long_ctx=long_ctx)
+    return logits[:, -1], caches
+
+
+def generate(params, cfg: ModelConfig, ctx: ShardingCtx, prompt: jax.Array,
+             max_new_tokens: int, *, temperature: float = 0.0,
+             key: Optional[jax.Array] = None,
+             capacity: Optional[int] = None) -> jax.Array:
+    """Greedy (temperature=0) or sampled generation.  prompt: (B, S)."""
+    B, S = prompt.shape
+    capacity = capacity or (S + max_new_tokens)
+    logits, caches = jax.jit(
+        functools.partial(prefill, cfg=cfg, ctx=ctx, capacity=capacity)
+    )(params, tokens=prompt)
+
+    step_jit = jax.jit(functools.partial(decode_step, cfg=cfg, ctx=ctx))
+
+    def sample(lg, k):
+        if temperature <= 0:
+            return jnp.argmax(lg, axis=-1)
+        return jax.random.categorical(k, lg / temperature, axis=-1)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = []
+    cur = sample(logits, key)[:, None]
+    toks.append(cur)
+    for i in range(1, max_new_tokens):
+        key, sub = jax.random.split(key)
+        logits, caches = step_jit(params, tokens=cur,
+                                  pos=jnp.asarray(S + i - 1), caches=caches)
+        cur = sample(logits, sub)[:, None]
+        toks.append(cur)
+    return jnp.concatenate(toks, axis=1)

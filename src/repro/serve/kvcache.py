@@ -1,0 +1,49 @@
+"""KV/SSM cache utilities: sizes, shardings, and budget accounting.
+
+The cache *layout* lives with the blocks (models/layers.py AttnCache ring
+buffer, models/ssm.py recurrent states); this module provides the serving-
+level bookkeeping used by launch/dryrun and the benchmarks."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import (
+    ModelConfig, ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN, BLOCK_MAMBA,
+    BLOCK_MLSTM, BLOCK_SLSTM,
+)
+from repro.models import transformer
+from repro.models.ssm import mamba_dims, mlstm_dims
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, context_len: int,
+                long_ctx: bool = False, bytes_per_el: int = 2) -> int:
+    """Total cache bytes across all layers (analytic, matches init_caches)."""
+    total = 0
+    R = cfg.pattern_repeats
+    for kind in cfg.block_pattern:
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN):
+            w = transformer.effective_window(cfg, kind, long_ctx)
+            cap = min(w, context_len) if w else context_len
+            total += R * 2 * batch * cap * cfg.kv_dim * bytes_per_el
+        elif kind == BLOCK_MAMBA:
+            din, H, P = mamba_dims(cfg)
+            N = cfg.ssm_state
+            total += R * batch * (H * P * N + (cfg.ssm_conv_width - 1)
+                                  * (din + 2 * N)) * 4
+        elif kind == BLOCK_MLSTM:
+            din, H, P = mlstm_dims(cfg)
+            total += R * batch * (H * P * P + H * P + H) * 4
+        elif kind == BLOCK_SLSTM:
+            total += R * batch * 4 * cfg.d_model * 4
+    return total
+
+
+def describe(cfg: ModelConfig, batch: int, context_len: int,
+             long_ctx: bool = False) -> Dict[str, float]:
+    b = cache_bytes(cfg, batch, context_len, long_ctx)
+    return {"cache_gb": b / 2**30,
+            "cache_gb_per_chip_256": b / 2**30 / 256,
+            "long_ctx": long_ctx}

@@ -1,0 +1,57 @@
+"""Training loop: metrics, timing, periodic checkpointing.
+
+The paper's framework design (§4) separates data handling, compute and
+communication; here the data pipeline prefetches on a background thread
+(data/pipeline.py), compute+comm are one jit'd train_step (XLA owns the
+overlap), and checkpointing is host-side."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+import jax
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = disabled
+    ckpt_dir: Optional[str] = None
+
+
+@dataclass
+class Trainer:
+    train_step: Callable            # (params, opt_state, step, batch) -> ...
+    cfg: TrainerConfig = field(default_factory=TrainerConfig)
+
+    def fit(self, params, opt_state, data_iter: Iterable,
+            start_step: int = 0, log_fn=print):
+        history = []
+        step_fn = jax.jit(self.train_step, donate_argnums=(0, 1))
+        t0 = time.perf_counter()
+        tokens_seen = 0
+        for step in range(start_step, self.cfg.total_steps):
+            batch = next(data_iter)
+            params, opt_state, metrics = step_fn(params, opt_state,
+                                                 step, batch)
+            if "tokens" in batch:
+                tokens_seen += int(batch["tokens"].size)
+            if (step + 1) % self.cfg.log_every == 0 or step == start_step:
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                rate = tokens_seen / dt if dt > 0 else 0.0
+                log_fn(f"step {step + 1:5d}  loss {loss:8.4f}  "
+                       f"gnorm {float(metrics['grad_norm']):7.3f}  "
+                       f"lr {float(metrics['lr']):.2e}  "
+                       f"{rate:9.0f} tok/s")
+                history.append(dict(step=step + 1, loss=loss,
+                                    grad_norm=float(metrics["grad_norm"])))
+            if (self.cfg.ckpt_every and self.cfg.ckpt_dir
+                    and (step + 1) % self.cfg.ckpt_every == 0):
+                ckpt_lib.save(self.cfg.ckpt_dir, step + 1,
+                              params=params, opt_state=opt_state)
+        return params, opt_state, history

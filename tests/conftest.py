@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — unit/smoke tests run on the single
+# real CPU device.  Multi-device tests (tests/test_distributed.py) spawn
+# subprocesses with their own --xla_force_host_platform_device_count.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

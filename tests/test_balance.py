@@ -1,0 +1,148 @@
+"""Paper §3 balance equations — executable-documentation tests.
+
+Each test pins an equation to either its closed form, a long-form
+re-derivation, or the paper's own reported numbers."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import (
+    get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
+)
+from repro.configs.base import ConvLayerSpec
+from repro.core import balance
+from repro.core.balance import LayerBalance
+
+
+def _conv(ifm, ofm, k, out_hw, stride=1):
+    return ConvLayerSpec("conv", ifm=ifm, ofm=ofm, kernel=k, stride=stride,
+                         out_hw=out_hw)
+
+
+# ---------------------------------------------------------------------------
+# §3.1 closed form == long form
+# ---------------------------------------------------------------------------
+@given(ifm=st.integers(1, 512), ofm=st.integers(1, 1024),
+       k=st.sampled_from([1, 3, 5, 7, 11]), out=st.integers(1, 64),
+       mb=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_comp_comm_closed_form(ifm, ofm, k, out, mb):
+    """comp/comm == 1.5*out_w*out_h*MB_node — independent of ifm/ofm/k."""
+    l = _conv(ifm, ofm, k, out)
+    comp = balance.conv_comp_flops(l, mb)
+    comm = balance.data_parallel_comm_bytes(l, overlap=1.0)
+    assert comp / comm == pytest.approx(
+        balance.data_parallel_comp_comm_ratio(l, mb), rel=1e-9)
+
+
+def test_table1_platform_ratios():
+    """Paper Table 1: required comp-to-comms 336 (FDR) / 1336 (10GbE)."""
+    assert FDR.peak_flops / FDR.link_bw == pytest.approx(336, rel=0.01)
+    assert GBE.peak_flops / GBE.link_bw == pytest.approx(1336, rel=0.01)
+
+
+def test_network_comp_comm_ratios_vs_paper():
+    """Paper §3.1: 'algorithmic computation-to-communication ratio [of]
+    convolutional layers of OverFeat-FAST and VGG-A are 208, and 1456'.
+    Our re-derivation from the layer tables lands within ~25% (the paper
+    does not give its exact layer dims); the ORDERING and magnitudes match."""
+    r_of = balance.aggregate_comp_comm_ratio(
+        get_config("overfeat-fast").conv_layers())
+    r_vgg = balance.aggregate_comp_comm_ratio(
+        get_config("vgg-a").conv_layers())
+    assert 160 < r_of < 280, r_of          # paper: 208
+    assert 1100 < r_vgg < 1800, r_vgg      # paper: 1456
+    assert r_vgg / r_of > 4                # VGG scales much further
+
+
+def test_max_nodes_overfeat_fdr_matches_paper():
+    """Paper Table 1: OverFeat-FAST on FDR scales to ~128 nodes (2/node)."""
+    layers = [LayerBalance(str(i), balance.conv_comp_flops(l, 1),
+                           balance.data_parallel_comm_bytes(l))
+              for i, l in enumerate(get_config("overfeat-fast").conv_layers())]
+    n = balance.max_data_parallel_nodes(layers, FDR, 256)
+    assert 100 < n <= 160, n
+
+
+def test_max_nodes_vgg_capped_by_minibatch():
+    layers = [LayerBalance(str(i), balance.conv_comp_flops(l, 1),
+                           balance.data_parallel_comm_bytes(l))
+              for i, l in enumerate(get_config("vgg-a").conv_layers())]
+    assert balance.max_data_parallel_nodes(layers, FDR, 256) == 256
+
+
+# ---------------------------------------------------------------------------
+# §3.2 model-parallel decision rule
+# ---------------------------------------------------------------------------
+def test_fc_prefers_model_parallel_when_ofm_gt_minibatch():
+    """Paper §3.2: for FC layers, ofm > minibatch => model parallelism."""
+    fc = ConvLayerSpec("fc", ifm=4096, ofm=4096, kernel=1, out_hw=1)
+    assert balance.model_parallel_preferred(fc, in_hw=1, minibatch=256)
+    assert not balance.model_parallel_preferred(fc, in_hw=1, minibatch=8192)
+
+
+def test_conv_prefers_data_parallel():
+    """Typical conv (ofm<=1024, k=3, in_hw>=14, mb>=64): data parallel."""
+    l = _conv(256, 512, 3, 28)
+    assert not balance.model_parallel_preferred(l, in_hw=28, minibatch=64)
+
+
+# ---------------------------------------------------------------------------
+# §3.3 hybrid parallelism
+# ---------------------------------------------------------------------------
+@given(n=st.sampled_from([16, 64, 256, 512]),
+       mb=st.sampled_from([64, 256, 1024]),
+       ofm=st.sampled_from([1024, 4096, 16384]))
+@settings(max_examples=30, deadline=None)
+def test_optimal_G_minimizes_hybrid_volume(n, mb, ofm):
+    """The closed-form G = sqrt(N*mb/ofm) beats (or ties) every other G."""
+    g_star = balance.optimal_group_count(n, mb, ofm)
+    v_star = balance.hybrid_comm_bytes(1, ofm, 1, 1, mb, g_star, n)
+    for g in {1, 2, 4, 8, max(1, g_star - 1), g_star + 1, n}:
+        if 1 <= g <= n:
+            v = balance.hybrid_comm_bytes(1, ofm, 1, 1, mb, g, n)
+            assert v_star <= v * 1.30 + 1e-9   # discrete rounding slack
+
+
+def test_hybrid_beats_pure_model_parallel_paper_example():
+    """Paper §3.3 example (ofm=4096, mb=256, N=64): hybrid < G=1 volume.
+    (The paper's printed G=3 / volume 213 are inconsistent with its own
+    closed form — sqrt(64*256/4096)=2 — we assert the qualitative claim.)"""
+    G, v_hybrid = balance.hybrid_comm_at_optimum(1, 4096, 256, 64,
+                                                 size_data=8)
+    v_model = balance.hybrid_comm_bytes(1, 4096, 1, 1, 256, 1, 64,
+                                        size_data=8)
+    assert G in (2, 3)
+    assert v_hybrid <= v_model  # exact tie at this point with our formulas
+    # a nearby configuration where hybrid is STRICTLY better than both ends
+    G2, v2 = balance.hybrid_comm_at_optimum(1, 4096, 1024, 64, size_data=8)
+    v_model2 = balance.hybrid_comm_bytes(1, 4096, 1, 1, 1024, 1, 64,
+                                         size_data=8)
+    v_data2 = balance.hybrid_comm_bytes(1, 4096, 1, 1, 1024, 64, 64,
+                                        size_data=8)
+    assert G2 > 1 and v2 < v_model2 and v2 < v_data2
+
+
+# ---------------------------------------------------------------------------
+# §3.1 bubbles
+# ---------------------------------------------------------------------------
+def test_bubble_first_layer_never_hidden():
+    layers = [LayerBalance("l0", 1e9, 1e6)]
+    b = balance.bubble_schedule(layers, FDR)
+    # only comp_0/3 can overlap layer 0's comm
+    assert b[0] == pytest.approx(1e6 / FDR.link_bw
+                                 - (1e9 / 3) / FDR.peak_flops)
+
+
+def test_scaling_efficiency_bounds():
+    layers = [LayerBalance(f"l{i}", 1e9 / (i + 1), 4e6) for i in range(5)]
+    eff = balance.scaling_efficiency(layers, FDR)
+    assert 0.0 < eff <= 1.0
+
+
+def test_efficiency_improves_with_more_compute_per_node():
+    small = [LayerBalance("l", 1e8, 4e6)]
+    big = [LayerBalance("l", 1e10, 4e6)]
+    assert balance.scaling_efficiency(big, FDR) \
+        >= balance.scaling_efficiency(small, FDR)

@@ -1,0 +1,25 @@
+"""Property tests for the strip helpers behind the §3.4 distributed update."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.collectives import flatten_pad, padded_size, unflatten
+
+
+@given(n=st.integers(1, 10_000), g=st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_padded_size_properties(n, g):
+    p = padded_size(n, g)
+    assert p >= n and p % g == 0 and p - n < g
+
+
+@given(dims=st.lists(st.integers(1, 8), min_size=1, max_size=3),
+       g=st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_flatten_pad_unflatten_roundtrip(dims, g):
+    x = jnp.arange(int(np.prod(dims)), dtype=jnp.float32).reshape(dims)
+    flat = flatten_pad(x, g)
+    assert flat.size % g == 0
+    np.testing.assert_array_equal(np.asarray(unflatten(flat, dims)),
+                                  np.asarray(x))

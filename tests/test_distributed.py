@@ -1,0 +1,325 @@
+"""Multi-device tests — each runs in a subprocess with
+--xla_force_host_platform_device_count=8 so the rest of the suite keeps the
+single real CPU device (per the dry-run isolation policy)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_part_reduce_broadcast_equals_psum():
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType, PartitionSpec as P
+        from repro.core.collectives import part_reduce, part_broadcast, \\
+            part_reduce_broadcast
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        x = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
+
+        def f(x):
+            return part_reduce_broadcast(x, "data", 0)
+
+        def g(x):
+            return jax.lax.psum(x, "data")
+
+        with jax.set_mesh(mesh):
+            a = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(),
+                                      out_specs=P(), check_vma=False))(x)
+            b = jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P(),
+                                      out_specs=P(), check_vma=False))(x)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+        print("OK")
+    """)
+
+
+def test_part_reduce_strips_sum_to_full_reduction():
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType, PartitionSpec as P
+        from repro.core.collectives import part_reduce
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        x = jnp.arange(16, dtype=jnp.float32)
+
+        def f(x):
+            return part_reduce(x, "data", 0)
+
+        with jax.set_mesh(mesh):
+            strips = jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=P(), out_specs=P("data"),
+                check_vma=False))(x)
+        np.testing.assert_allclose(np.asarray(strips), np.asarray(x) * 8)
+        print("OK")
+    """)
+
+
+def test_distributed_sgd_equals_serial_multi_axis():
+    """The paper's §3.4 update over ("pod","data") == serial SGD."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.optim import MomentumSGD
+        from repro.optim.dist import make_distributed_update
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+        opt = MomentumSGD(momentum=0.9, weight_decay=0.01)
+        params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) / 7,
+                  "b": jnp.ones((5,), jnp.float32)}
+        grads = jax.tree.map(lambda p: jnp.cos(p), params)
+        ref_p, ref_s = opt.update(grads, opt.init(params), params, 0.05)
+        init_fn, update_fn = make_distributed_update(
+            opt, mesh, data_axes=("pod", "data"))
+        with jax.set_mesh(mesh):
+            st = init_fn(params)
+            new_p, st = jax.jit(update_fn)(params, grads, st, 0.05)
+            ref_p2, ref_s2 = opt.update(grads, ref_s, ref_p, 0.05)
+            new_p2, st = jax.jit(update_fn)(new_p, grads, st, 0.05)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(new_p2[k]),
+                                       np.asarray(ref_p2[k]), rtol=1e-5)
+        print("OK")
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    """pjit train step on a 2x2 mesh == single-device step (same loss)."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import get_config, smoke_variant
+        from repro.core.sharding import ShardingCtx, ShardingRules
+        from repro.core.params import Spec
+        from repro.models import transformer
+        from repro.optim import AdamW
+        from repro.optim.schedule import constant
+        from repro.train import make_train_step
+
+        cfg = smoke_variant(get_config("llama3-8b"))
+        key = jax.random.PRNGKey(0)
+        params = transformer.init_params(cfg, key)
+        tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+        opt = AdamW()
+        sched = constant(1e-3)
+
+        # single device
+        ctx1 = ShardingCtx()
+        step1 = make_train_step(
+            lambda p, b: transformer.lm_loss(p, cfg, ctx1, b), opt, sched)
+        p1, s1, m1 = jax.jit(step1)(params, opt.init(params), 0,
+                                    {"tokens": tokens})
+
+        # 2x2 mesh
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        rules = ShardingRules()
+        ctx2 = ShardingCtx(mesh, rules)
+        sp = transformer.param_specs(cfg)
+        shardings = jax.tree.map(
+            lambda s: rules.sharding(s.axes, s.shape, mesh), sp,
+            is_leaf=lambda x: isinstance(x, Spec))
+        params2 = jax.tree.map(jax.device_put, params, shardings)
+        step2 = make_train_step(
+            lambda p, b: transformer.lm_loss(p, cfg, ctx2, b), opt, sched)
+        with jax.set_mesh(mesh):
+            p2, s2, m2 = jax.jit(step2)(params2, opt.init(params2), 0,
+                                        {"tokens": tokens})
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=2e-3)
+        # updated params agree
+        la, lb = jax.tree.leaves(p1), jax.tree.leaves(p2)
+        for a, b in zip(la, lb):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-2, atol=2e-3)
+        print("OK")
+    """)
+
+
+def test_moe_arch_sharded_forward():
+    """MoE forward under a mesh keeps loss equal to single-device."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import get_config, smoke_variant
+        from repro.core.sharding import ShardingCtx, ShardingRules
+        from repro.core.params import Spec
+        from repro.models import transformer
+        cfg = smoke_variant(get_config("qwen2-moe-a2.7b"))
+        key = jax.random.PRNGKey(0)
+        params = transformer.init_params(cfg, key)
+        batch = {"tokens": jax.random.randint(key, (4, 32), 0,
+                                              cfg.vocab_size)}
+        l1 = transformer.lm_loss(params, cfg, ShardingCtx(), batch)
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        rules = ShardingRules()
+        ctx = ShardingCtx(mesh, rules)
+        sp = transformer.param_specs(cfg)
+        sh = jax.tree.map(lambda s: rules.sharding(s.axes, s.shape, mesh),
+                          sp, is_leaf=lambda x: isinstance(x, Spec))
+        params2 = jax.tree.map(jax.device_put, params, sh)
+        with jax.set_mesh(mesh):
+            l2 = jax.jit(lambda p, b: transformer.lm_loss(p, cfg, ctx, b))(
+                params2, batch)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=2e-3)
+        print("OK")
+    """)
+
+
+def test_explicit_expert_parallel_matches_tensor_parallel():
+    """§Perf V7: the shard_map+all_to_all expert-parallel MoE block equals
+    the TP block (dropless capacities) on a 2x4 mesh."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import get_config, smoke_variant
+        from repro.core.sharding import ShardingCtx, ShardingRules
+        from repro.core.params import init_tree
+        from repro.models import moe
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        cfg = smoke_variant(get_config("mixtral-8x22b")).replace(
+            moe_capacity_factor=4.0)
+        p = init_tree(moe.moe_specs(cfg), jax.random.PRNGKey(0))
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(4, 16, cfg.d_model)), jnp.float32)
+        ref, aux_ref = moe.moe_block(p, x, cfg, ShardingCtx())
+        ctx = ShardingCtx(mesh, ShardingRules())
+        with jax.set_mesh(mesh):
+            out, aux = jax.jit(lambda p, x: moe.moe_ep_block(
+                p, x, cfg, ctx))(p, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+        print("OK")
+    """)
+
+
+def test_seq_shard_carry_preserves_loss():
+    """§Perf L4: sequence-sharded residual carries change memory layout,
+    not math."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import get_config, smoke_variant
+        from repro.core.sharding import ShardingCtx, ShardingRules
+        from repro.core.params import Spec
+        from repro.models import transformer
+        cfg = smoke_variant(get_config("llama3-8b"))
+        key = jax.random.PRNGKey(0)
+        params = transformer.init_params(cfg, key)
+        batch = {"tokens": jax.random.randint(key, (4, 32), 0,
+                                              cfg.vocab_size)}
+        l0 = transformer.lm_loss(params, cfg, ShardingCtx(), batch)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        rules = ShardingRules()
+        ctx = ShardingCtx(mesh, rules)
+        cfg2 = cfg.replace(seq_shard_carry=True, remat="block")
+        with jax.set_mesh(mesh):
+            l1 = jax.jit(lambda p, b: transformer.lm_loss(
+                p, cfg2, ctx, b))(params, batch)
+        np.testing.assert_allclose(float(l0), float(l1), rtol=2e-3)
+        print("OK")
+    """)
+
+
+def test_sharded_decode_attention_matches_reference():
+    """§Perf D1: shard_map partial-softmax decode == unsharded decode."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import get_config, smoke_variant
+        from repro.core.sharding import ShardingCtx, ShardingRules
+        from repro.core.params import init_tree
+        from repro.models import layers
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        cfg = smoke_variant(get_config("gemma2-2b")).replace(
+            attn_logit_softcap=50.0)
+        p = init_tree(layers.attn_specs(cfg), jax.random.PRNGKey(0))
+        B, C = 4, 32
+        rng = np.random.default_rng(0)
+        shp = (B, C, cfg.num_kv_heads, cfg.head_dim)
+        cache = layers.AttnCache(
+            jnp.asarray(rng.normal(size=shp), jnp.float32),
+            jnp.asarray(rng.normal(size=shp), jnp.float32),
+            jnp.asarray(20, jnp.int32))
+        x = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)), jnp.float32)
+        pos = jnp.full((B, 1), 20, jnp.int32)
+        ref_out, ref_c = layers.attention_block(
+            p, x, cfg, ShardingCtx(), pos, window=0, cache=cache)
+        rules = ShardingRules().with_overrides(cache_seq=("model",))
+        ctx = ShardingCtx(mesh, rules)
+        with jax.set_mesh(mesh):
+            out, nc = jax.jit(lambda p, x, c: layers.attention_block(
+                p, x, cfg, ctx, pos, window=0, cache=c))(p, x, cache)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(nc.k), np.asarray(ref_c.k),
+                                   rtol=1e-5, atol=1e-5)
+        assert int(nc.length) == int(ref_c.length) == 21
+        print("OK")
+    """)
+
+
+def test_ep_training_end_to_end_matches_tp():
+    """A full train step through the EP MoE path (shard_map all_to_all under
+    scan + remat + grad) matches the single-device TP path."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import get_config, smoke_variant
+        from repro.core.sharding import ShardingCtx, ShardingRules
+        from repro.core.params import Spec
+        from repro.models import transformer
+        from repro.optim import AdamW
+        from repro.optim.schedule import constant
+        from repro.train import make_train_step
+        cfg0 = smoke_variant(get_config("mixtral-8x22b")).replace(
+            moe_capacity_factor=4.0)
+        key = jax.random.PRNGKey(0)
+        params = transformer.init_params(cfg0, key)
+        batch = {"tokens": jax.random.randint(key, (4, 32), 0,
+                                              cfg0.vocab_size)}
+        opt = AdamW()
+        step0 = make_train_step(lambda p, b: transformer.lm_loss(
+            p, cfg0, ShardingCtx(), b), opt, constant(1e-3))
+        p0, _, m0 = jax.jit(step0)(params, opt.init(params), 0, batch)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        # E=4 experts divisible by model=4 -> EP path (pad=0+gate override)
+        cfg1 = cfg0.replace(moe_expert_pad=4, remat="block")
+        # pad params to Ep=8
+        def pad_fix(path, a):
+            ks = jax.tree_util.keystr(path)
+            if any(w in ks for w in ["w_gate", "w_up", "w_down"]):
+                return jnp.pad(a, [(0, 0), (0, 4)] + [(0, 0)] * (a.ndim - 2))
+            return a
+        params1 = jax.tree_util.tree_map_with_path(pad_fix, params)
+        rules = ShardingRules()
+        ctx = ShardingCtx(mesh, rules)
+        step1 = make_train_step(lambda p, b: transformer.lm_loss(
+            p, cfg1, ctx, b), opt, constant(1e-3))
+        with jax.set_mesh(mesh):
+            p1, _, m1 = jax.jit(step1)(params1, opt.init(params1), 0, batch)
+        np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]),
+                                   rtol=3e-3)
+        np.testing.assert_allclose(float(m0["grad_norm"]),
+                                   float(m1["grad_norm"]), rtol=2e-2)
+        print("OK")
+    """)

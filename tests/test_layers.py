@@ -1,0 +1,107 @@
+"""Layer-level tests: RoPE/M-RoPE, chunked attention, norms, MLP."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models import layers
+
+RNG = np.random.default_rng(11)
+
+
+def _arr(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def test_rope_relative_position_property():
+    """q_i . k_j after RoPE depends only on (i - j)."""
+    D = 64
+    q = _arr(1, 1, 1, D)
+    k = _arr(1, 1, 1, D)
+
+    def dot_at(pi, pj):
+        qr = layers.apply_rope(q, jnp.full((1, 1), pi))
+        kr = layers.apply_rope(k, jnp.full((1, 1), pj))
+        return float(jnp.sum(qr * kr))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+    assert dot_at(17, 0) == pytest.approx(dot_at(1017, 1000), rel=1e-4)
+
+
+def test_rope_norm_preserving():
+    x = _arr(2, 8, 4, 64)
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    y = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_mrope_equals_rope_when_positions_equal():
+    """If all 3 position components coincide (text tokens), M-RoPE must
+    reduce to plain RoPE."""
+    D = 64
+    x = _arr(1, 6, 2, D)
+    pos1 = jnp.broadcast_to(jnp.arange(6), (1, 6))
+    pos3 = jnp.repeat(pos1[..., None], 3, axis=-1)
+    got = layers.apply_mrope(x, pos3, (8, 12, 12), 10000.0)
+    want = layers.apply_rope(x, pos1, 10000.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("window,softcap,gqa", [
+    (0, 0.0, 1), (32, 0.0, 2), (0, 50.0, 4), (64, 30.0, 2),
+])
+def test_chunked_attention_vs_ref(window, softcap, gqa):
+    hq, hkv = 4, 4 // gqa
+    q, k, v = _arr(2, 128, hq, 32), _arr(2, 128, hkv, 32), _arr(2, 128, hkv, 32)
+    got = layers.chunked_attention(q, k, v, causal=True, window=window,
+                                   logit_softcap=softcap, chunk=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=window,
+                             logit_softcap=softcap)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(chunk=st.sampled_from([16, 32, 64, 128]))
+@settings(max_examples=8, deadline=None)
+def test_chunked_attention_chunk_invariance(chunk):
+    q, k, v = _arr(1, 128, 2, 32), _arr(1, 128, 2, 32), _arr(1, 128, 2, 32)
+    got = layers.chunked_attention(q, k, v, chunk=chunk)
+    want = layers.chunked_attention(q, k, v, chunk=128)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_right_aligned_decode_window():
+    """Sq < Skv (queries right-aligned): last query attends to the last
+    `window` keys only."""
+    q = _arr(1, 1, 1, 16)
+    k, v = _arr(1, 64, 1, 16), _arr(1, 64, 1, 16)
+    got = layers.chunked_attention(q, k, v, causal=True, window=8, chunk=16)
+    want = ref.attention_ref(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def test_rms_norm_scale_invariance():
+    x = _arr(2, 4, 16)
+    w = jnp.zeros((16,))
+    y1 = layers.rms_norm(x, w)
+    y2 = layers.rms_norm(x * 100.0, w)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+def test_rms_norm_unit_rms():
+    x = _arr(2, 4, 256)
+    y = layers.rms_norm(x, jnp.zeros((256,)))
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones_like(rms), rtol=1e-3)

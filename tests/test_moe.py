@@ -1,0 +1,146 @@
+"""MoE routing/dispatch tests."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.core.params import init_tree
+from repro.core.sharding import ShardingCtx
+from repro.models import moe
+
+RNG = np.random.default_rng(5)
+
+
+def _cfg():
+    return smoke_variant(get_config("mixtral-8x22b"))  # E=4, k=2, dropless
+
+
+def _params(cfg, seed=0):
+    return init_tree(moe.moe_specs(cfg), jax.random.PRNGKey(seed))
+
+
+def moe_dense_reference(p, x, cfg):
+    """Dense reference: every token through its top-k experts, no capacity."""
+    from repro.models.layers import rms_norm
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    w = w / w.sum(-1, keepdims=True)
+    # run every expert densely, then combine
+    g = jax.nn.silu(jnp.einsum("bsd,edf->bsef", h, p["w_gate"]))
+    u = jnp.einsum("bsd,edf->bsef", h, p["w_up"])
+    ye = jnp.einsum("bsef,efd->bsed", g * u, p["w_down"])   # (B,S,E,d)
+    onehot = jax.nn.one_hot(idx, cfg.num_experts)            # (B,S,k,E)
+    comb = jnp.einsum("bske,bsk,bsed->bsd", onehot, w, ye)
+    return x + comb
+
+
+def test_dispatch_matches_dense_reference():
+    cfg = _cfg()
+    p = _params(cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 16, cfg.d_model)), jnp.float32)
+    got, aux = moe.moe_block(p, x, cfg, ShardingCtx())
+    want = moe_dense_reference(p, x, cfg)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_capacity_drops_tokens():
+    """With capacity_factor << 1 outputs must differ from dropless (tokens
+    actually get dropped) but stay finite."""
+    cfg = _cfg()
+    tight = cfg.replace(moe_capacity_factor=0.25)
+    p = _params(cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 16, cfg.d_model)), jnp.float32)
+    full, _ = moe.moe_block(p, x, cfg, ShardingCtx())
+    dropped, _ = moe.moe_block(p, x, tight, ShardingCtx())
+    assert bool(jnp.isfinite(dropped).all())
+    assert float(jnp.max(jnp.abs(full - dropped))) > 1e-6
+
+
+def test_aux_loss_balanced_lower_bound():
+    """Switch aux loss: E * sum f_e p_e >= 1 with equality iff balanced."""
+    cfg = _cfg()
+    p = _params(cfg)
+    x = jnp.asarray(RNG.normal(size=(4, 32, cfg.d_model)), jnp.float32)
+    _, aux = moe.moe_block(p, x, cfg, ShardingCtx())
+    # aux is scaled by router_aux_loss_coef
+    raw = float(aux) / cfg.router_aux_loss_coef
+    assert raw >= 0.95, raw
+
+
+def test_shared_experts_path():
+    cfg = smoke_variant(get_config("qwen2-moe-a2.7b"))
+    assert cfg.num_shared_experts >= 1
+    p = _params(cfg, seed=3)
+    x = jnp.asarray(RNG.normal(size=(2, 8, cfg.d_model)), jnp.float32)
+    out, aux = moe.moe_block(p, x, cfg, ShardingCtx())
+    assert out.shape == x.shape and bool(jnp.isfinite(out).all())
+
+
+def test_decode_gather_path_matches_train_path():
+    """S==1 weight-gather path == capacity path (dropless config)."""
+    cfg = _cfg()
+    p = _params(cfg, seed=4)
+    x = jnp.asarray(RNG.normal(size=(3, 1, cfg.d_model)), jnp.float32)
+    dec, _ = moe.moe_block(p, x, cfg, ShardingCtx())
+    # trick: run train path by reshaping to sequence on batch 1... instead
+    # compare against the dense reference
+    want = moe_dense_reference(p, x, cfg)
+    np.testing.assert_allclose(dec, want, rtol=3e-3, atol=3e-3)
+
+
+def test_moe_gradients_flow_to_router_and_experts():
+    cfg = _cfg()
+    p = _params(cfg, seed=5)
+    x = jnp.asarray(RNG.normal(size=(2, 8, cfg.d_model)), jnp.float32)
+
+    def loss(p):
+        out, aux = moe.moe_block(p, x, cfg, ShardingCtx())
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).max()) > 0
+    assert float(jnp.abs(g["w_gate"]).max()) > 0
+
+
+def test_chunked_loss_equals_plain():
+    import jax
+    from repro.models import transformer
+    from repro.configs import get_config, smoke_variant
+    cfg = smoke_variant(get_config("qwen2-moe-a2.7b"))
+    p = jax.tree.map(lambda a: a, transformer.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0,
+                                          cfg.vocab_size)}
+    from repro.core.sharding import ShardingCtx
+    l0 = transformer.lm_loss(p, cfg, ShardingCtx(), batch)
+    l1 = transformer.lm_loss(p, cfg.replace(loss_chunk=4), ShardingCtx(),
+                             batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_expert_pad_preserves_semantics():
+    """Padded (dummy) experts never receive tokens -> identical output."""
+    import jax.numpy as jnp
+    from repro.models import transformer
+    from repro.configs import get_config, smoke_variant
+    from repro.core.sharding import ShardingCtx
+    cfg = smoke_variant(get_config("qwen2-moe-a2.7b"))
+    p = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                                          cfg.vocab_size)}
+    l0 = transformer.lm_loss(p, cfg, ShardingCtx(), batch)
+
+    def pad_fix(path, a):
+        ks = jax.tree_util.keystr(path)
+        if any(w in ks for w in ["w_gate", "w_up", "w_down"]):
+            return jnp.pad(a, [(0, 0), (0, 2)] + [(0, 0)] * (a.ndim - 2))
+        return a
+
+    pp = jax.tree_util.tree_map_with_path(pad_fix, p)
+    l2 = transformer.lm_loss(pp, cfg.replace(moe_expert_pad=2),
+                             ShardingCtx(), batch)
+    np.testing.assert_allclose(float(l0), float(l2), rtol=1e-5)

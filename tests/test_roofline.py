@@ -1,0 +1,56 @@
+"""Roofline analyzer tests: HLO collective parsing + ring cost model."""
+import pytest
+
+from repro.configs import TPU_V5E
+from repro.core import roofline
+
+HLO = """
+HloModule test
+  %all-reduce = f32[1024,512]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[4096]{0} all-gather(%y), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[128,128]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[1,256]<=[256], dimensions={0}, to_apply=%add
+  %a2a = f32[64]{0} all-to-all(%w), channel_id=4, replica_groups=[16,16]<=[256]
+  %cp = f32[32,32]{1,0} collective-permute(%v), channel_id=5, source_target_pairs={{0,1}}
+  %ard = f32[8] all-reduce-done(%ar_start)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = roofline.parse_collectives(HLO)
+    assert st.count_by_kind["all-reduce"] == 1
+    assert st.count_by_kind["all-gather"] == 1
+    assert st.count_by_kind["reduce-scatter"] == 1
+    assert st.count_by_kind["all-to-all"] == 1
+    assert st.count_by_kind["collective-permute"] == 1
+    assert st.bytes_by_kind["all-reduce"] == 1024 * 512 * 4
+    assert st.bytes_by_kind["all-gather"] == 4096 * 2
+
+
+def test_ring_model():
+    st = roofline.parse_collectives(HLO)
+    ar = 2 * (15 / 16) * 1024 * 512 * 4
+    ag = (15 / 16) * 4096 * 2
+    rs = (255 / 256) * 128 * 128 * 4
+    a2a = (15 / 16) * 64 * 4
+    cp = 32 * 32 * 4
+    assert st.ring_bytes == pytest.approx(ar + ag + rs + a2a + cp)
+
+
+def test_report_terms_and_dominant():
+    st_cost = {"flops": 1e15, "bytes accessed": 1e11}
+    rep = roofline.analyze("a", "s", "16x16", 256, st_cost, HLO,
+                           model_flops_total=2.56e17, hw=TPU_V5E)
+    assert rep.compute_s == pytest.approx(1e15 / 197e12)
+    assert rep.memory_s == pytest.approx(1e11 / 819e9)
+    assert rep.dominant == "compute"
+    assert rep.useful_flops_ratio == pytest.approx(1.0)
+    assert 0 < rep.mfu <= 1.0
+
+
+def test_async_start_ops_not_double_counted():
+    txt = """
+    %ag-start = (f32[128], f32[512]) all-gather-start(%p), replica_groups=[2,4]<=[8]
+    %ag-done = f32[512] all-gather-done(%ag-start)
+    """
+    st = roofline.parse_collectives(txt)
+    assert st.count_by_kind.get("all-gather", 0) == 1

@@ -1,0 +1,164 @@
+"""SSM property tests: chunk-parallel forms == naive per-step recurrences."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.core.sharding import ShardingCtx
+from repro.models import ssm
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+def ssd_naive(x, dt, A, Bm, Cm):
+    """Literal recurrence: h_t = h_{t-1}*exp(A dt_t) + dt_t B_t x_t."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((Bsz, H, P, N))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None, :])                  # (B,H)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], x[:, t], Bm[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, Cm[:, t]))
+    return jnp.stack(ys, axis=1), h
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_naive(chunk):
+    B, S, H, P, N = 2, 16, 3, 4, 8
+    x = _arr(B, S, H, P)
+    dt = jax.nn.softplus(_arr(B, S, H))
+    A = -jnp.abs(_arr(H)) - 0.1
+    Bm, Cm = _arr(B, S, N), _arr(B, S, N)
+    y_naive, h_naive = ssd_naive(x, dt, A, Bm, Cm)
+    y, h = ssm.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(y, y_naive, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h, h_naive, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    B, S, H, P, N = 1, 32, 2, 4, 4
+    x = _arr(B, S, H, P)
+    dt = jax.nn.softplus(_arr(B, S, H))
+    A = -jnp.abs(_arr(H)) - 0.1
+    Bm, Cm = _arr(B, S, N), _arr(B, S, N)
+    y8, _ = ssm.ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    y32, _ = ssm.ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(y8, y32, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_init_state_continuation():
+    """Splitting a sequence in two with state carry == one pass."""
+    B, S, H, P, N = 1, 16, 2, 4, 4
+    x = _arr(B, S, H, P)
+    dt = jax.nn.softplus(_arr(B, S, H))
+    A = -jnp.abs(_arr(H)) - 0.1
+    Bm, Cm = _arr(B, S, N), _arr(B, S, N)
+    y_full, h_full = ssm.ssd_chunked(x, dt, A, Bm, Cm, chunk=4)
+    y1, h1 = ssm.ssd_chunked(x[:, :8], dt[:, :8], A, Bm[:, :8], Cm[:, :8],
+                             chunk=4)
+    y2, h2 = ssm.ssd_chunked(x[:, 8:], dt[:, 8:], A, Bm[:, 8:], Cm[:, 8:],
+                             chunk=4, init_state=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h2, h_full, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_block_decode_matches_full():
+    cfg = smoke_variant(get_config("zamba2-2.7b"))
+    sp = ssm.mamba_specs(cfg)
+    from repro.core.params import init_tree
+    p = init_tree(sp, jax.random.PRNGKey(0))
+    ctx = ShardingCtx()
+    x = _arr(2, 9, cfg.d_model)
+    full, _ = ssm.mamba_block(p, x, cfg, ctx)
+    cache = ssm.init_mamba_cache(cfg, 2)
+    out, cache = ssm.mamba_block(p, x[:, :8], cfg, ctx, cache=cache)
+    step, cache = ssm.mamba_block(p, x[:, 8:9], cfg, ctx, cache=cache)
+    np.testing.assert_allclose(step[:, 0], full[:, 8], rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_naive(q, k, v, log_f, log_i):
+    """Literal stabilized recurrence (xLSTM paper eqs)."""
+    B, S, H, P = q.shape
+    qs = q / (P ** 0.5)
+    C = jnp.zeros((B, H, P, P))
+    n = jnp.zeros((B, H, P))
+    m = jnp.full((B, H), -1e30)
+    ys = []
+    for t in range(S):
+        m_new = jnp.maximum(log_f[:, t] + m, log_i[:, t])
+        f = jnp.exp(log_f[:, t] + m - m_new)
+        i = jnp.exp(log_i[:, t] - m_new)
+        C = f[:, :, None, None] * C + i[:, :, None, None] * jnp.einsum(
+            "bhp,bhq->bhpq", k[:, t], v[:, t])
+        n = f[..., None] * n + i[..., None] * k[:, t]
+        num = jnp.einsum("bhp,bhpq->bhq", qs[:, t], C)
+        den = jnp.abs(jnp.einsum("bhp,bhp->bh", n, qs[:, t]))
+        ys.append(num / jnp.maximum(den, jnp.exp(-m_new))[..., None])
+        m = m_new
+    return jnp.stack(ys, 1)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mlstm_chunked_matches_naive(chunk):
+    B, S, H, P = 2, 16, 2, 4
+    q, k, v = _arr(B, S, H, P), _arr(B, S, H, P), _arr(B, S, H, P)
+    log_f = jax.nn.log_sigmoid(_arr(B, S, H) + 2.0)
+    log_i = _arr(B, S, H) * 0.5
+    want = mlstm_naive(q, k, v, log_f, log_i)
+    got, _ = ssm._mlstm_chunk_scan(q, k, v, log_f, log_i, chunk, None)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_mlstm_block_decode_matches_full():
+    cfg = smoke_variant(get_config("xlstm-125m"))
+    from repro.core.params import init_tree
+    p = init_tree(ssm.mlstm_specs(cfg), jax.random.PRNGKey(1))
+    ctx = ShardingCtx()
+    x = _arr(2, 9, cfg.d_model)
+    full, _ = ssm.mlstm_block(p, x, cfg, ctx, chunk=4)
+    cache = ssm.init_mlstm_cache(cfg, 2)
+    _, cache = ssm.mlstm_block(p, x[:, :8], cfg, ctx, cache=cache, chunk=4)
+    step, _ = ssm.mlstm_block(p, x[:, 8:9], cfg, ctx, cache=cache)
+    np.testing.assert_allclose(step[:, 0], full[:, 8], rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def test_slstm_decode_matches_full():
+    cfg = smoke_variant(get_config("xlstm-125m"))
+    from repro.core.params import init_tree
+    p = init_tree(ssm.slstm_specs(cfg), jax.random.PRNGKey(2))
+    ctx = ShardingCtx()
+    x = _arr(2, 9, cfg.d_model)
+    full, _ = ssm.slstm_block(p, x, cfg, ctx)
+    cache = ssm.init_slstm_cache(cfg, 2)
+    _, cache = ssm.slstm_block(p, x[:, :8], cfg, ctx, cache=cache)
+    step, _ = ssm.slstm_block(p, x[:, 8:9], cfg, ctx, cache=cache)
+    np.testing.assert_allclose(step[:, 0], full[:, 8], rtol=5e-3, atol=5e-3)
+
+
+def test_slstm_stabilizer_no_overflow():
+    """Exponential input gate must not overflow with large preactivations."""
+    cfg = smoke_variant(get_config("xlstm-125m"))
+    from repro.core.params import init_tree
+    p = init_tree(ssm.slstm_specs(cfg), jax.random.PRNGKey(3))
+    p = jax.tree.map(lambda a: a * 5.0, p)
+    ctx = ShardingCtx()
+    out, _ = ssm.slstm_block(p, _arr(1, 32, cfg.d_model) * 10, cfg, ctx)
+    assert bool(jnp.isfinite(out).all())
