@@ -1,0 +1,120 @@
+"""Bucket-size sweep for the gradient communication subsystem (repro.comm).
+
+For the paper's CNN workloads this sweeps the fusion-buffer size over the
+§3.2 latency+bucket model (core.balance): per step, the collective count
+drops from O(#tensors) — one part-reduce/part-broadcast pair per tensor, the
+seed schedule — to O(total_bytes / bucket_bytes), and the predicted gradient
+round-trip time bottoms out near the closed-form optimum
+``optimal_bucket_bytes`` = sqrt(B * SWlat * BW * G).  The hierarchical rows
+compare one flat 128-member ring against the two-level in-pod + cross-pod
+composition on the same tree.
+
+Collective counts come from the REAL planner (repro.comm.plan_buckets over
+the actual weight-tensor shapes), so they match what the bucketed
+``make_distributed_update`` would issue; only the times are model-predicted.
+"""
+from __future__ import annotations
+
+from repro.comm.bucketer import plan_buckets
+from repro.configs import (
+    get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
+)
+from repro.core.balance import (
+    SIZE_F32, bucketed_allreduce_time, collective_count,
+    hierarchical_allreduce_time, optimal_bucket_bytes,
+)
+
+MIB = 2**20
+SWEEP_MIB = (0.25, 1.0, 4.0, 16.0, 32.0)
+G = 64           # the paper's 256-minibatch / 4-per-node operating point
+G_PODS, G_IN = 8, 16   # two-level composition of 128 nodes
+
+
+class _FakeLeaf:
+    """Shape-only stand-in so plan_buckets runs without materializing VGG-A."""
+    def __init__(self, *shape):
+        self.shape = tuple(shape)
+        self.size = 1
+        for s in shape:
+            self.size *= s
+
+
+def grad_tree(net: str):
+    """Weight + bias leaves of a paper CNN, in layer order."""
+    cfg = get_config(net)
+    leaves = []
+    for l in cfg.layers:
+        if l.kind == "conv":
+            leaves.append(_FakeLeaf(l.kernel, l.kernel, l.ifm, l.ofm))
+            leaves.append(_FakeLeaf(l.ofm))
+        elif l.kind == "fc":
+            leaves.append(_FakeLeaf(l.ifm, l.ofm))
+            leaves.append(_FakeLeaf(l.ofm))
+    return leaves
+
+
+def rows():
+    out = []
+    for net in ("vgg-a", "overfeat-fast"):
+        leaves = grad_tree(net)
+        total = sum(l.size for l in leaves) * SIZE_F32
+        n_tensors = len(leaves)
+        out.append((f"comm/{net}/n_tensors", n_tensors, ""))
+        out.append((f"comm/{net}/grad_MiB", total / MIB, ""))
+        # the serialization granularity of each schedule is its largest
+        # single message: the biggest tensor for per-tensor, the biggest
+        # fusion buffer for bucketed plans
+        max_leaf = max(l.size for l in leaves) * SIZE_F32
+        for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
+            # per-tensor baseline: the seed schedule's collective count
+            t0 = bucketed_allreduce_time(total, n_tensors, 0, G, hw,
+                                         fill_bytes=max_leaf)
+            out.append((f"comm/{net}/{tag}/per_tensor_ms", t0 * 1e3,
+                        f"n_coll={n_tensors};fill_MiB={max_leaf / MIB:.1f}"))
+            for mib in SWEEP_MIB:
+                plan = plan_buckets(leaves, G, int(mib * MIB))
+                n_model = collective_count(total, n_tensors, mib * MIB)
+                fill = max(b.size for b in plan.buckets) * SIZE_F32
+                # time uses the REAL plan's count and largest buffer (the
+                # planner never splits a tensor, so it can issue far fewer
+                # collectives than the closed-form ceil(total/bucket) —
+                # the `model=` column shows that law)
+                t = bucketed_allreduce_time(total, n_tensors, mib * MIB,
+                                            G, hw,
+                                            n_coll=plan.n_collectives,
+                                            fill_bytes=fill)
+                out.append((f"comm/{net}/{tag}/bucket_{mib}MiB_ms", t * 1e3,
+                            f"n_coll={plan.n_collectives};model={n_model}"))
+            # closed-form optimum (splittable-tensor model — the planner
+            # rows above carry the real unsplittable-tensor counts)
+            b_star = optimal_bucket_bytes(total, G, hw)
+            t_star = bucketed_allreduce_time(total, n_tensors, b_star, G, hw)
+            out.append((f"comm/{net}/{tag}/opt_bucket_MiB", b_star / MIB,
+                        f"closed_form_ms={t_star * 1e3:.3f}"))
+        # hierarchical vs flat at 128 nodes (8 pods x 16), 4 MiB buckets
+        plan4 = plan_buckets(leaves, G_PODS * G_IN, 4 * MIB)
+        fill4 = max(b.size for b in plan4.buckets) * SIZE_F32
+        t_flat = bucketed_allreduce_time(total, n_tensors, 4 * MIB,
+                                         G_PODS * G_IN, FDR,
+                                         n_coll=plan4.n_collectives,
+                                         fill_bytes=fill4)
+        t_hier = hierarchical_allreduce_time(total, n_tensors, 4 * MIB,
+                                             G_IN, G_PODS, FDR,
+                                             pod_bw=4 * FDR.link_bw,
+                                             n_coll=plan4.n_collectives,
+                                             fill_bytes=fill4)
+        out.append((f"comm/{net}/hier128_flat_ms", t_flat * 1e3,
+                    f"ring={G_PODS * G_IN}"))
+        out.append((f"comm/{net}/hier128_two_level_ms", t_hier * 1e3,
+                    f"in_pod={G_IN};cross_pod={G_PODS}"))
+    return out
+
+
+def main():
+    print(f"{'metric':48s} {'value':>12s}  derived")
+    for name, v, derived in rows():
+        print(f"{name:48s} {v:12.4f}  {derived}")
+
+
+if __name__ == "__main__":
+    main()

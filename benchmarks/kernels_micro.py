@@ -14,6 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.comm.bucketer import pack_bucket, plan_buckets, unpack_buckets
 from repro.core.blocking import solve_conv_blocking, solve_gemm_blocking
 from repro.kernels import ref
 from repro.kernels.blocked_matmul import blocked_matmul
@@ -67,6 +68,20 @@ def rows():
                                             logit_softcap=50.0),
                      rtol=3e-4, atol=3e-4)
     out.append(("kernel/flash_attn_swa_softcap_256", us, f"ok={ok}"))
+
+    # comm bucketer: pack->unpack round-trip overhead on a VGG-ish gradient
+    # tree (many small conv/bias leaves + one big fc leaf); the fusion cost
+    # the bucketed part-reduce adds to the hot path
+    tree = [jnp.asarray(RNG.normal(size=s), jnp.float32)
+            for s in [(3, 3, 64, 64), (64,), (3, 3, 64, 128), (128,),
+                      (3, 3, 128, 256), (256,), (512, 4096), (4096,)]]
+    plan = plan_buckets(tree, group=8, bucket_bytes=2**20)
+    f = jax.jit(lambda t: unpack_buckets(
+        [pack_bucket(t, b) for b in plan.buckets], plan))
+    us, got = _t(f, tree)
+    ok = all(np.allclose(a, b) for a, b in zip(got, tree))
+    out.append(("kernel/comm_bucket_pack_unpack", us,
+                f"n_coll={plan.n_collectives};leaves={plan.n_leaves};ok={ok}"))
     return out
 
 

@@ -79,6 +79,15 @@ def main() -> None:
         traceback.print_exc()
         failures += 1
 
+    _section("Comm: bucket-size sweep (§3.2 latency model + repro.comm plan)")
+    try:
+        from benchmarks import comm_bucket_sweep
+        for name, v, derived in comm_bucket_sweep.rows():
+            _emit(name, float(v), derived)
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+
     _section("Kernels: §2 single-node layer (interpret mode)")
     try:
         from benchmarks import kernels_micro

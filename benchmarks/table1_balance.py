@@ -13,8 +13,10 @@ from repro.configs import (
     get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
 )
 from repro.core import balance
-from repro.core.balance import LayerBalance, conv_comp_flops, \
-    data_parallel_comm_bytes, max_data_parallel_nodes
+from repro.core.balance import (
+    SIZE_F32, LayerBalance, conv_comp_flops, data_parallel_comm_bytes,
+    max_data_parallel_nodes, optimal_bucket_bytes,
+)
 
 PAPER = {
     ("comp_to_comms", "FDR"): 336, ("comp_to_comms", "10GbE"): 1336,
@@ -41,6 +43,9 @@ def rows():
         layers = [LayerBalance(str(i), conv_comp_flops(l, 1),
                                data_parallel_comm_bytes(l))
                   for i, l in enumerate(cfg.conv_layers())]
+        grad_bytes = SIZE_F32 * sum(
+            l.ifm * l.ofm * max(l.kernel, 1) ** 2
+            for l in cfg.layers if l.kind in ("conv", "fc"))
         for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
             n = max_data_parallel_nodes(layers, hw, 256)
             min_pts = max(1, math.ceil(256 / max(n, 1)))
@@ -48,6 +53,11 @@ def rows():
                         PAPER[("min_points", net, tag)]))
             out.append((f"table1/max_nodes_{net}_{tag}", n, 256 / PAPER[
                 ("min_points", net, tag)]))
+            # §3.2 latency+bucket extension: the fusion-buffer size that
+            # balances SWlat against pipeline fill at the Table-1 node count
+            b = optimal_bucket_bytes(grad_bytes, max(1, round(n)), hw)
+            out.append((f"table1/opt_bucket_MiB_{net}_{tag}", b / 2**20,
+                        float("nan")))
     return out
 
 

@@ -1,0 +1,49 @@
+"""Gradient-communication subsystem: bucketed, hierarchical part-reduce /
+part-broadcast (paper §3.2–§3.4).
+
+The paper's §3.4 schedule is one part-reduce (MPI_Reduce_scatter) before the
+optimizer and one part-broadcast (MPI_Allgather) after it.  Issued per tensor
+— as ``optim/dist.py`` originally did — every small conv/bias tensor pays the
+full per-message software latency (the paper's SWlat, §3.2 Eq. for comms_sys),
+which is exactly the latency-bound regime the §3.2 balance model says kills
+scaling for VGG-A's many small tensors.  This package fixes that with three
+knobs, all carried by :class:`~repro.comm.bucketer.CommConfig`:
+
+``bucket_bytes`` (paper §3.2, the latency term)
+    The flattened gradient tree is coalesced into fixed-byte fusion buffers
+    ("buckets"); each bucket is ONE part-reduce/part-broadcast pair instead of
+    one pair per tensor, so the per-step collective count drops from
+    O(#tensors) to O(total_bytes / bucket_bytes).  The optimal size trades
+    per-message latency against pipeline fill and is predicted by
+    ``core.balance.optimal_bucket_bytes`` (sqrt(B · SWlat · comms_sys · G)).
+
+``reduce_dtype`` (paper §3.1, the size_data factor)
+    Wire dtype for the gradient reduction: ``"float32"`` (paper baseline,
+    size_data=4) or ``"bfloat16"`` (halves every comm term in the §3.1
+    balance equations).  Gradients are cast back to fp32 immediately after
+    each collective stage, so the optimizer always accumulates in fp32; the
+    updated-weight part-broadcast is always fp32 (weights are never
+    quantized on the wire).
+
+``hierarchical`` (paper §3.3/§3.4 group composition)
+    Two-level schedule for ``("pod", "data")``-style axis tuples: an in-pod
+    reduce-scatter followed by a cross-pod hop on the 1/G_pod strips (and the
+    inverse all-gathers for part-broadcast).  This is the paper's composition
+    of node groups — the cross-pod link moves strip_bytes instead of joining
+    one flat ring that spans pods — and the cross-pod stage always
+    accumulates in fp32 even when the in-pod wire dtype is bf16.
+
+Layout: :mod:`repro.comm.bucketer` owns the static bucket plan and the
+pack/unpack of leaves into fusion buffers; :mod:`repro.comm.schedule` owns
+the collective schedules (flat and hierarchical) that run inside
+``jax.shard_map``.  ``optim.dist.make_distributed_update`` and the explicit
+ZeRO-1 train step (``train.train_step.make_train_step(dist_update=...)``)
+are the consumers.
+"""
+from repro.comm.bucketer import (  # noqa: F401
+    Bucket, BucketPlan, CommConfig, LeafSlot, pack_bucket, plan_buckets,
+    unpack_buckets,
+)
+from repro.comm.schedule import (  # noqa: F401
+    FlatSchedule, HierarchicalSchedule, make_schedule,
+)

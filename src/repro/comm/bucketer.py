@@ -1,0 +1,160 @@
+"""Gradient bucketing: coalesce a tensor tree into fixed-byte fusion buffers.
+
+The plan is computed host-side from static leaf shapes (greedy first-fit in
+tree order, like PyTorch DDP's gradient buckets), so every offset below is a
+Python int and ``pack``/``unpack`` trace to pure reshape/concat/slice ops —
+no dynamic shapes inside jit.  Each bucket is padded to a multiple of the
+group size ``G`` so that one ``part_reduce``/``part_broadcast`` pair moves
+the whole bucket and every member owns an equal 1-D strip of it (the paper's
+§3.4 strip scheme, applied per bucket instead of per tensor).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives import padded_size
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """Knobs of the gradient-communication subsystem (see package docstring
+    for the paper-section mapping).
+
+    bucket_bytes:  target fusion-buffer size.  ``<= 0`` disables fusion
+                   (one bucket per tensor — the legacy per-tensor schedule).
+                   A single tensor larger than ``bucket_bytes`` gets a
+                   bucket of its own (buckets never split a tensor).
+    reduce_dtype:  wire dtype of the gradient part-reduce, ``"float32"`` or
+                   ``"bfloat16"``.  fp32 accumulate after every stage.
+    hierarchical:  use the two-level in-pod + cross-pod schedule when the
+                   data axes are a 2-tuple like ``("pod", "data")``.
+    """
+    bucket_bytes: int = 4 * 2**20
+    reduce_dtype: str = "float32"
+    hierarchical: bool = False
+
+    def __post_init__(self):
+        assert self.reduce_dtype in ("float32", "bfloat16"), (
+            f"reduce_dtype must be 'float32' or 'bfloat16', "
+            f"got {self.reduce_dtype!r}")
+
+    @property
+    def wire_dtype(self):
+        return jnp.bfloat16 if self.reduce_dtype == "bfloat16" else jnp.float32
+
+
+@dataclass(frozen=True)
+class LeafSlot:
+    """Where one tree leaf lives inside its bucket's packed buffer."""
+    index: int                 # leaf position in the flattened tree
+    shape: Tuple[int, ...]
+    size: int                  # number of elements (== prod(shape))
+    offset: int                # element offset inside the bucket buffer
+    dtype: Optional[str] = None  # leaf dtype name; None = unknown (shape-
+                                 # only planning, e.g. the sweep benchmark)
+
+
+@dataclass(frozen=True)
+class Bucket:
+    slots: Tuple[LeafSlot, ...]
+    size: int                  # payload elements (sum of slot sizes)
+    padded_size: int           # size rounded up to a multiple of the group
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    buckets: Tuple[Bucket, ...]
+    group: int                 # G: members of the part-reduce group
+    n_leaves: int
+
+    @property
+    def n_collectives(self) -> int:
+        """Collective pairs per step — the quantity bucketing shrinks from
+        O(#tensors) to O(total_bytes / bucket_bytes)."""
+        return len(self.buckets)
+
+    @property
+    def total_elements(self) -> int:
+        return sum(b.size for b in self.buckets)
+
+    @property
+    def total_padded(self) -> int:
+        return sum(b.padded_size for b in self.buckets)
+
+
+def plan_buckets(tree: Any, group: int, bucket_bytes: int,
+                 itemsize: int = 4) -> BucketPlan:
+    """Greedy first-fit bucket assignment over ``tree``'s leaves in tree
+    order.  Shapes only — no array data is touched.  Buckets never mix
+    dtypes (concatenating mixed leaves would silently promote them), so a
+    dtype change in tree order also closes the current bucket; ``itemsize``
+    is only the fallback for shape-only leaves with no ``.dtype``."""
+    leaves = jax.tree.leaves(tree)
+    cap = math.inf if bucket_bytes is None else bucket_bytes
+    buckets: List[Bucket] = []
+    slots: List[LeafSlot] = []
+    fill = fill_bytes = 0
+    cur_dtype: Optional[str] = None
+
+    def close():
+        nonlocal slots, fill, fill_bytes
+        if slots:
+            buckets.append(Bucket(tuple(slots), fill,
+                                  padded_size(fill, group)))
+        slots, fill, fill_bytes = [], 0, 0
+
+    for i, leaf in enumerate(leaves):
+        size = int(leaf.size) if hasattr(leaf, "size") else int(
+            math.prod(leaf.shape))
+        dt = getattr(leaf, "dtype", None)
+        dt_name = None if dt is None else np.dtype(dt).name
+        isz = itemsize if dt is None else np.dtype(dt).itemsize
+        nbytes = size * isz
+        if cap <= 0:
+            # fusion disabled: per-tensor buckets (legacy schedule)
+            buckets.append(Bucket(
+                (LeafSlot(i, tuple(leaf.shape), size, 0, dt_name),), size,
+                padded_size(size, group)))
+            continue
+        if slots and (fill_bytes + nbytes > cap or dt_name != cur_dtype):
+            close()
+        cur_dtype = dt_name
+        slots.append(LeafSlot(i, tuple(leaf.shape), size, fill, dt_name))
+        fill += size
+        fill_bytes += nbytes
+        if fill_bytes >= cap:
+            close()
+    close()
+    return BucketPlan(tuple(buckets), group, len(leaves))
+
+
+def pack_bucket(flat_leaves: Sequence[jax.Array], bucket: Bucket) -> jax.Array:
+    """Concatenate the bucket's leaves into one padded 1-D fusion buffer."""
+    parts = [flat_leaves[s.index].reshape(-1) for s in bucket.slots]
+    pad = bucket.padded_size - bucket.size
+    if pad:
+        parts.append(jnp.zeros((pad,), parts[0].dtype))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unpack_buckets(buffers: Sequence[jax.Array],
+                   plan: BucketPlan) -> List[jax.Array]:
+    """Slice the fusion buffers back into leaves (tree order), restoring
+    each leaf's recorded dtype (the optimizer may have promoted the bucket
+    buffer, e.g. bf16 params updated against fp32 gradient strips)."""
+    out: List[jax.Array] = [None] * plan.n_leaves
+    for buf, bucket in zip(buffers, plan.buckets):
+        for s in bucket.slots:
+            leaf = jax.lax.slice(
+                buf, (s.offset,), (s.offset + s.size,)).reshape(s.shape)
+            if s.dtype is not None and leaf.dtype != np.dtype(s.dtype):
+                leaf = leaf.astype(s.dtype)
+            out[s.index] = leaf
+    return out

@@ -1,0 +1,102 @@
+"""Collective schedules for the bucketed gradient reduction (paper §3.4).
+
+Both schedules implement the same contract, to be called INSIDE
+``jax.shard_map``: ``reduce`` turns a replicated-shape fusion buffer of
+partial sums into this member's 1-D strip (sum over the group, fp32 out),
+``broadcast`` is its exact inverse on updated strips, and ``owner_index`` is
+the flat strip index the member owns — ``reduce`` scatters strip ``i`` to
+the member whose ``owner_index() == i``, and params must be sliced with the
+same index for the ZeRO-1 strip update to line up.
+
+FlatSchedule
+    One ring over the (possibly composed) group: ``psum_scatter`` /
+    ``all_gather`` over the axis tuple, exactly the seed per-tensor path but
+    per bucket.  Wire dtype applies to the single reduce stage.
+
+HierarchicalSchedule (paper §3.3/§3.4 group composition)
+    For ``axes == (outer, inner)`` — canonically ``("pod", "data")``: the
+    in-pod reduce-scatter runs over ``inner`` first (wire dtype, ring of
+    G_in members, full bucket bytes), then the cross-pod hop reduce-scatters
+    the 1/G_in strips over ``outer`` in fp32 (fp32 accumulate across pods,
+    strip bytes only on the slow link).  Member ``(p, d)`` owns flat strip
+    ``d * G_out + p``; ``broadcast`` inverts with all-gathers in the
+    opposite order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import (
+    AxisNames, axis_size, part_broadcast, part_reduce,
+)
+
+
+def _flat_index(axis_names: AxisNames) -> jax.Array:
+    if isinstance(axis_names, str):
+        return lax.axis_index(axis_names)
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+@dataclass(frozen=True)
+class FlatSchedule:
+    """Single-level ring over all data axes at once."""
+    axes: AxisNames
+
+    def group_size(self) -> int:
+        return axis_size(self.axes)
+
+    def owner_index(self) -> jax.Array:
+        return _flat_index(self.axes)
+
+    def reduce(self, buf: jax.Array, wire_dtype=jnp.float32) -> jax.Array:
+        strip = part_reduce(buf.astype(wire_dtype), self.axes, dim=0)
+        return strip.astype(jnp.float32)
+
+    def broadcast(self, strip: jax.Array) -> jax.Array:
+        return part_broadcast(strip, self.axes, dim=0)
+
+
+@dataclass(frozen=True)
+class HierarchicalSchedule:
+    """Two-level in-pod (``inner``) + cross-pod (``outer``) schedule."""
+    outer: str
+    inner: str
+
+    def group_size(self) -> int:
+        return lax.axis_size(self.outer) * lax.axis_size(self.inner)
+
+    def owner_index(self) -> jax.Array:
+        # stage 1 scatters chunk d to inner member d; stage 2 scatters
+        # sub-chunk p of chunk d to outer member p -> flat strip d*G_out + p
+        return (lax.axis_index(self.inner) * lax.axis_size(self.outer)
+                + lax.axis_index(self.outer))
+
+    def reduce(self, buf: jax.Array, wire_dtype=jnp.float32) -> jax.Array:
+        in_pod = part_reduce(buf.astype(wire_dtype), self.inner, dim=0)
+        # cross-pod hop: strip bytes only, always fp32 accumulate
+        return part_reduce(in_pod.astype(jnp.float32), self.outer, dim=0)
+
+    def broadcast(self, strip: jax.Array) -> jax.Array:
+        in_pod = part_broadcast(strip, self.outer, dim=0)
+        return part_broadcast(in_pod, self.inner, dim=0)
+
+
+Schedule = Union[FlatSchedule, HierarchicalSchedule]
+
+
+def make_schedule(axes: Union[str, Tuple[str, ...]],
+                  hierarchical: bool = False) -> Schedule:
+    """Pick the schedule for ``axes``.  The hierarchical form needs exactly
+    two axes ``(outer, inner)``; anything else falls back to the flat ring
+    (a one-axis "hierarchy" IS the flat ring)."""
+    if hierarchical and not isinstance(axes, str) and len(axes) == 2:
+        return HierarchicalSchedule(outer=axes[0], inner=axes[1])
+    return FlatSchedule(axes=axes)

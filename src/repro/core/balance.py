@@ -14,6 +14,7 @@ These equations are used three ways:
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Iterable, List, Sequence, Tuple
@@ -173,6 +174,107 @@ def hybrid_comm_at_optimum(ifm: int, ofm: int, minibatch: int, N: int,
     vol = hybrid_comm_bytes(ifm, ofm, 1, 1, minibatch, G, N, overlap=0.0,
                             size_data=size_data)
     return G, vol
+
+
+# ---------------------------------------------------------------------------
+# §3.2 latency + bucket term (extends the paper's pure-bandwidth comm model)
+# ---------------------------------------------------------------------------
+# The paper's comms_sys is bandwidth-only; its SWlat appears once per message.
+# The part-reduce/part-broadcast pair for one fusion buffer on a ring of G
+# members costs 2*(G-1) messages, so issuing one pair PER TENSOR puts nets
+# with many small tensors (VGG-A conv biases) in the latency-bound regime.
+# Bucketing (repro.comm) amortizes SWlat over bucket_bytes; these closed
+# forms predict the collective count and the optimal bucket size that
+# benchmarks/table1_balance.py and the comm sweep report.
+def collective_count(total_bytes: float, n_tensors: int,
+                     bucket_bytes: float) -> int:
+    """Part-reduce/part-broadcast pairs per step: O(#tensors) without
+    fusion (bucket_bytes <= 0), O(total_bytes / bucket_bytes) with it."""
+    if bucket_bytes <= 0:
+        return n_tensors
+    return max(1, math.ceil(total_bytes / bucket_bytes))
+
+
+def ring_collective_time(nbytes: float, G: int, hw: HardwareConfig) -> float:
+    """One reduce-scatter + all-gather pair on a G-member ring:
+    2*(G-1) messages of nbytes/G each (bandwidth-optimal decomposition,
+    see collectives.part_reduce_broadcast) + per-message SWlat."""
+    if G <= 1:
+        return 0.0
+    return 2.0 * (G - 1) * (hw.sw_latency + (nbytes / G) / hw.link_bw)
+
+
+def bucketed_allreduce_time(total_bytes: float, n_tensors: int,
+                            bucket_bytes: float, G: int,
+                            hw: HardwareConfig,
+                            n_coll: int = 0,
+                            fill_bytes: float = 0.0) -> float:
+    """Gradient round-trip time with fusion buffers:
+        n_coll * 2*(G-1)*SWlat            (latency, amortized by bucketing)
+      + 2*(G-1)/G * total_bytes / BW      (bandwidth, bucket-independent)
+      + 2*(G-1)/G * fill_bytes / BW       (pipeline fill: the first message
+                                           cannot overlap anything)
+    Minimized by ``optimal_bucket_bytes``.  The fill term applies to EVERY
+    schedule — per-tensor included: its granularity is the largest single
+    tensor, which for fc-heavy nets dwarfs any sane bucket.
+
+    ``n_coll`` overrides the closed-form collective count with the REAL
+    planner's (``repro.comm.plan_buckets(...).n_collectives``) — the closed
+    form assumes tensors split freely across buckets, but the planner never
+    splits one, so a tree dominated by a few huge tensors issues far fewer
+    collectives than ceil(total/bucket).  ``fill_bytes`` likewise overrides
+    the default average-message estimate (total/n_coll) with the largest
+    real message when the caller knows it."""
+    if G <= 1:
+        return 0.0
+    if n_coll <= 0:
+        n_coll = collective_count(total_bytes, n_tensors, bucket_bytes)
+    if fill_bytes <= 0:
+        fill_bytes = total_bytes / n_coll
+    frac = 2.0 * (G - 1) / G
+    return (n_coll * 2.0 * (G - 1) * hw.sw_latency
+            + frac * (total_bytes + fill_bytes) / hw.link_bw)
+
+
+def optimal_bucket_bytes(total_bytes: float, G: int,
+                         hw: HardwareConfig) -> float:
+    """Minimizer of ``bucketed_allreduce_time`` over the bucket size:
+    d/db [ (B/b)*2*(G-1)*SWlat + 2*(G-1)/G * (B+b)/BW ] = 0
+        =>  b* = sqrt(B * SWlat * BW * G).
+    Clamped to [64 KiB, B] (a bucket never exceeds the whole tree)."""
+    if G <= 1 or total_bytes <= 0:
+        return total_bytes
+    b = math.sqrt(total_bytes * hw.sw_latency * hw.link_bw * G)
+    return max(min(b, total_bytes), min(64 * 1024, total_bytes))
+
+
+def hierarchical_allreduce_time(total_bytes: float, n_tensors: int,
+                                bucket_bytes: float, g_in: int, g_out: int,
+                                hw: HardwareConfig,
+                                pod_bw: float = 0.0,
+                                n_coll: int = 0,
+                                fill_bytes: float = 0.0) -> float:
+    """Two-level schedule (repro.comm.HierarchicalSchedule): bucketed
+    reduce-scatter + all-gather in-pod over ``g_in`` members at the fast
+    in-pod bandwidth ``pod_bw`` (defaults to hw.link_bw), plus the cross-pod
+    hop over ``g_out`` pods moving only the 1/g_in strip bytes on
+    hw.link_bw.  Composes the paper's §3.3 node groups.
+
+    Both stages issue ONE collective per bucket (the cross-pod hop reduces
+    each bucket's strip, it does not re-bucket it), so a single collective
+    count applies to both; ``n_coll`` overrides it with the real planner's."""
+    if n_coll <= 0:
+        n_coll = collective_count(total_bytes, n_tensors, bucket_bytes)
+    pod_hw = hw if pod_bw <= 0 else dataclasses.replace(
+        hw, name=hw.name + "+pod", link_bw=pod_bw)
+    t_in = bucketed_allreduce_time(total_bytes, n_tensors, bucket_bytes,
+                                   g_in, pod_hw, n_coll=n_coll,
+                                   fill_bytes=fill_bytes)
+    strip_bytes = total_bytes / max(g_in, 1)
+    t_out = bucketed_allreduce_time(strip_bytes, n_tensors, bucket_bytes,
+                                    g_out, hw, n_coll=n_coll,
+                                    fill_bytes=fill_bytes / max(g_in, 1))
+    return t_in + t_out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,90 @@
+"""Backfill newer-jax public APIs onto jax 0.4.x so the codebase runs on
+both (the code targets the jax>=0.6 names; CPU containers may pin 0.4.x).
+
+Imported for its side effects from ``repro/__init__.py`` (and prepended to
+the subprocess snippets in tests/test_distributed.py, which touch jax before
+importing repro).  Every patch is gated on the attribute being absent, so on
+a jax that already provides the API this module is inert.
+
+Backfills:
+  * ``jax.sharding.AxisType`` — enum accepted (and ignored: 0.4 meshes are
+    all auto) by the ``make_mesh`` wrapper below.
+  * ``jax.make_mesh(..., axis_types=...)`` — drops the kwarg on 0.4.
+  * ``jax.shard_map(..., check_vma=...)`` — maps to
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+  * ``jax.set_mesh(mesh)`` — returns the mesh itself, whose context-manager
+    protocol on 0.4 establishes the same ambient mesh that ``set_mesh``
+    provides on newer jax (all call sites use ``with jax.set_mesh(m):``).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+if not hasattr(jax.sharding, "AxisType"):
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+_AM = jax.sharding.AbstractMesh
+if "shape_tuple" in inspect.signature(_AM.__init__).parameters:
+    # 0.4.x signature: AbstractMesh(((name, size), ...)); newer jax:
+    # AbstractMesh(axis_sizes, axis_names).  Factory keeps the new call form.
+    def AbstractMesh(axis_sizes, axis_names=None, *a, **kw):
+        if axis_names is None:
+            return _AM(axis_sizes, *a, **kw)
+        return _AM(tuple(zip(axis_names, axis_sizes)), *a, **kw)
+
+    jax.sharding.AbstractMesh = AbstractMesh
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, **kw):
+        if check_vma is not None:
+            check_rep = check_vma
+        if check_rep is not None:
+            kw["check_rep"] = check_rep
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+
+if not hasattr(jax.lax, "axis_size"):
+    def _axis_size(axis_name):
+        # psum of a unit constant is the historical spelling: it constant-
+        # folds to the (static) size of the named axis
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = _axis_size
+
+
+if not hasattr(jax, "set_mesh"):
+    def set_mesh(mesh):
+        # Mesh is a context manager on 0.4; entering it is the ambient-mesh
+        # effect set_mesh has on newer jax
+        return mesh
+
+    jax.set_mesh = set_mesh

@@ -2,11 +2,20 @@
 
 Between local weight-gradient computation and the SGD step, gradients are
 **part-reduce**d over the data-parallel group: each group member receives the
-fully-reduced gradient for a 1/G strip of every tensor.  The member applies
-the optimizer to ITS strip only (optimizer state exists only for the strip —
-the paper's scheme is ZeRO-1 avant la lettre), then **part-broadcast**s the
-updated strip so every member again holds the full weights before the next
-forward pass.
+fully-reduced gradient for a 1/G strip, applies the optimizer to ITS strip
+only (optimizer state exists only for the strip — the paper's scheme is
+ZeRO-1 avant la lettre), then **part-broadcast**s the updated strip so every
+member again holds the full weights before the next forward pass.
+
+Communication goes through ``repro.comm``: the gradient tree is coalesced
+into fixed-byte fusion buffers (``CommConfig.bucket_bytes``) so each BUCKET
+is one part-reduce/part-broadcast pair instead of one pair per tensor —
+collective count drops from O(#tensors) to O(total_bytes / bucket_bytes),
+which is what keeps VGG-A's many small conv/bias tensors out of the
+latency-bound regime of the §3.2 balance model.  ``comm=None`` selects the
+seed per-tensor schedule (kept as the reference the bucketed path is
+property-tested against); the optimizer itself is elementwise, so bucketed
+strips, per-tensor strips and the serial update agree to float tolerance.
 
 This module is the explicit shard_map realization, used by the
 data-parallel examples and by the equivalence property tests
@@ -16,36 +25,32 @@ optimizer state carries data-axis sharding (see train/train_step.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
+from typing import Optional
+
+import numpy as np
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.sharding import NamedSharding
 
-from repro.core.collectives import (
-    axis_size, flatten_pad, padded_size, part_broadcast, part_reduce,
-    strip_broadcast, strip_reduce, unflatten,
+from repro.comm.bucketer import (
+    CommConfig, pack_bucket, plan_buckets, unpack_buckets,
 )
+from repro.comm.schedule import make_schedule
+from repro.core.collectives import flatten_pad, strip_broadcast, strip_reduce
+
+DEFAULT_COMM = CommConfig()
 
 
-def _flat_index(axis_names) -> jax.Array:
-    if isinstance(axis_names, str):
-        return lax.axis_index(axis_names)
-    idx = jnp.zeros((), jnp.int32)
-    for a in axis_names:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
-    return idx
-
-
-def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",)):
+def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
+                            comm: Optional[CommConfig] = DEFAULT_COMM):
     """Build (init_fn, update_fn) realizing the paper's update under
     shard_map over ``data_axes``.  Params/grads enter replicated across the
     data axes (grads are the LOCAL minibatch-shard gradients, summed over
     local samples); optimizer state lives as per-member strips sharded on
-    dim 0.
+    dim 0 — per fusion bucket when ``comm`` is given, per tensor when
+    ``comm`` is None.
 
     update_fn(params, grads, opt_state, lr) -> (new_params, new_opt_state)
     """
@@ -55,26 +60,111 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",)):
     for a in axes:
         G *= mesh.shape[a]
 
+    if comm is None:
+        return _make_per_tensor_update(optimizer, mesh, axis_arg, G)
+
+    def _plan(params):
+        return plan_buckets(params, G, comm.bucket_bytes)
+
+    # row j of a (G, n/G) state tensor lands on the member at flat mesh
+    # index j, but under the hierarchical schedule that member OWNS strip
+    # owner_index = d*G_out + p — so value-initialized optimizer state must
+    # be laid out in owner order (zeros-init state is insensitive to this)
+    if comm.hierarchical and len(axes) == 2:
+        g_out, g_in = mesh.shape[axes[0]], mesh.shape[axes[1]]
+        _owner_perm = np.array(
+            [d * g_out + p for p in range(g_out) for d in range(g_in)])
+    else:
+        _owner_perm = None
+
+    def _strip_init(params):
+        plan = _plan(params)
+        flat = jax.tree.leaves(params)
+        # (G, n/G) fusion-buffer strips: dim 0 sharded over the data axes
+        strips = [pack_bucket(flat, b).reshape(G, -1) for b in plan.buckets]
+        if _owner_perm is not None:
+            strips = [s[_owner_perm] for s in strips]
+        return optimizer.init(strips)
+
+    def init_fn(params):
+        # compute replicated, then reshard with device_put: jit with
+        # out_shardings miscompiles this pack+reshard pattern on jax 0.4.x
+        # (values arrive multiplied by a mesh-axis extent)
+        with jax.set_mesh(mesh):
+            state = jax.jit(_strip_init)(params)
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)), state)
+        return jax.tree.map(jax.device_put, state, shardings)
+
+    def _update(params, grads, opt_state, lr):
+        plan = _plan(params)
+        sched = make_schedule(axis_arg, comm.hierarchical)
+        flat_params, treedef = jax.tree.flatten(params)
+        flat_grads = jax.tree.leaves(grads)
+        i = sched.owner_index()
+
+        # 1) one part-reduce per BUCKET: pack gradients into the fusion
+        #    buffer, reduce on the wire dtype, mean in fp32
+        g_strips, p_strips = [], []
+        for b in plan.buckets:
+            gbuf = pack_bucket(flat_grads, b)
+            g_strips.append(sched.reduce(gbuf, comm.wire_dtype) / G)
+            # 2) slice this member's strip of the (replicated) params
+            pbuf = pack_bucket(flat_params, b)
+            n = b.padded_size // G
+            p_strips.append(lax.dynamic_slice(pbuf, (i * n,), (n,)))
+        # 3) serial optimizer on the bucket strips (elementwise, so fusing
+        #    tensors into one buffer does not change the math); opt_state
+        #    enters as the local strip because shard_map split dim 0
+        s_local = jax.tree.map(
+            lambda s: s[0] if s.ndim >= 2 else s, opt_state)
+        new_p_strips, new_state = optimizer.update(g_strips, s_local,
+                                                   p_strips, lr)
+        # 4) one part-broadcast per bucket (always fp32 — weights are never
+        #    quantized on the wire), then un-fuse back into tensors
+        bufs = [sched.broadcast(ps) for ps in jax.tree.leaves(new_p_strips)]
+        new_params = jax.tree.unflatten(treedef, unpack_buckets(bufs, plan))
+        new_state = jax.tree.map(
+            lambda s: s[None] if s.ndim >= 1 else s, new_state)
+        return new_params, new_state
+
+    def update_fn(params, grads, opt_state, lr):
+        pspec = jax.tree.map(lambda _: P(), params)
+        sspec = jax.tree.map(lambda s: _state_spec(s, axis_arg), opt_state)
+        fn = jax.shard_map(
+            _update, mesh=mesh,
+            in_specs=(pspec, pspec, sspec, P()),
+            out_specs=(pspec, sspec),
+            check_vma=False)
+        return fn(params, grads, opt_state, lr)
+
+    return init_fn, update_fn
+
+
+def _state_spec(s, axis_arg) -> P:
+    # strip tensors are (G, n/G): dim 0 sharded; scalars (e.g. AdamW
+    # step count) replicated
+    return P(axis_arg) if getattr(s, "ndim", 0) >= 2 else P()
+
+
+def _make_per_tensor_update(optimizer, mesh: Mesh, axis_arg, G: int):
+    """The seed schedule: one part-reduce/part-broadcast pair PER TENSOR.
+    Latency-bound for nets with many small tensors (§3.2); retained as the
+    reference implementation the bucketed path is tested against."""
+
     def _strip_init(params):
         def per_tensor(p):
             flat = flatten_pad(p, G)
-            strip = flat.reshape(G, -1)
-            return strip  # (G, n/G): dim 0 sharded over the data axes
-        strips = jax.tree.map(per_tensor, params)
-        return optimizer.init(strips)
-
-    def _state_spec(s) -> P:
-        # strip tensors are (G, n/G): dim 0 sharded; scalars (e.g. AdamW
-        # step count) replicated
-        return P(axis_arg) if getattr(s, "ndim", 0) >= 2 else P()
+            return flat.reshape(G, -1)
+        return optimizer.init(jax.tree.map(per_tensor, params))
 
     def init_fn(params):
-        template = jax.eval_shape(_strip_init, params)
-        out_shardings = jax.tree.map(
-            lambda s: NamedSharding(mesh, _state_spec(s)), template)
-        # build strip-shaped state: (G, n/G) per tensor, dim0 sharded
+        # see the bucketed init_fn: device_put instead of out_shardings
         with jax.set_mesh(mesh):
-            return jax.jit(_strip_init, out_shardings=out_shardings)(params)
+            state = jax.jit(_strip_init)(params)
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)), state)
+        return jax.tree.map(jax.device_put, state, shardings)
 
     def _update(params, grads, opt_state, lr):
         flat_params, treedef = jax.tree.flatten(params)
@@ -83,14 +173,13 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",)):
         # 1) part-reduce every gradient into this member's strip (mean)
         g_strips = [strip_reduce(g, axis_arg) for g in flat_grads]
         # 2) slice this member's strip of the (replicated) params
-        i = _flat_index(axis_arg)
+        i = make_schedule(axis_arg).owner_index()
         p_strips = []
         for p in flat_params:
             flat = flatten_pad(p, G)
             n = flat.size // G
             p_strips.append(lax.dynamic_slice(flat, (i * n,), (n,)))
-        # 3) serial optimizer on the strips (opt_state enters as the local
-        #    strip because shard_map in_specs split dim 0)
+        # 3) serial optimizer on the strips
         g_tree = jax.tree.unflatten(treedef, g_strips)
         p_tree = jax.tree.unflatten(treedef, p_strips)
         s_local = jax.tree.map(
@@ -107,7 +196,7 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",)):
 
     def update_fn(params, grads, opt_state, lr):
         pspec = jax.tree.map(lambda _: P(), params)
-        sspec = jax.tree.map(_state_spec, opt_state)
+        sspec = jax.tree.map(lambda s: _state_spec(s, axis_arg), opt_state)
         fn = jax.shard_map(
             _update, mesh=mesh,
             in_specs=(pspec, pspec, sspec, P()),

@@ -7,12 +7,14 @@ Two equivalent realizations of the paper's §3.4 update:
     ``zero1=True`` the optimizer state is sharded over the data axes and XLA
     factorizes the all-reduce into reduce-scatter (part-reduce) + all-gather
     (part-broadcast) around the update — the paper's exact schedule.
-  * ``optim.dist.make_distributed_update`` (explicit shard_map) — used in
-    examples/tests; equivalence is property-tested.
+  * ``optim.dist.make_distributed_update`` (explicit shard_map, bucketed
+    through ``repro.comm``) — used in examples/tests; equivalence is
+    property-tested.  Passing its ``update_fn`` as ``dist_update`` below
+    routes the whole ZeRO-1 train step through the bucketed fusion-buffer
+    collectives instead of the serial ``optimizer.update``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax
@@ -28,9 +30,18 @@ def global_norm(tree) -> jax.Array:
 
 
 def make_train_step(loss_fn: Callable, optimizer, lr_schedule,
-                    grad_clip: float = 1.0):
+                    grad_clip: float = 1.0,
+                    dist_update: Optional[Callable] = None):
     """loss_fn(params, batch) -> scalar loss.  Returns
     step(params, opt_state, step_idx, batch) -> (params, opt_state, metrics).
+
+    ``dist_update`` (optional): an explicit distributed update
+    ``(params, grads, opt_state, lr) -> (new_params, new_opt_state)`` — the
+    ``update_fn`` built by ``optim.dist.make_distributed_update`` — replacing
+    the serial ``optimizer.update``.  This is the explicit ZeRO-1 path: the
+    step's gradients flow through the bucketed part-reduce, the strip
+    optimizer, and the bucketed part-broadcast of ``repro.comm``.  The
+    matching ``opt_state`` must come from the same builder's ``init_fn``.
     """
     def train_step(params, opt_state, step_idx, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
@@ -39,7 +50,11 @@ def make_train_step(loss_fn: Callable, optimizer, lr_schedule,
             scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
             grads = jax.tree.map(lambda g: g * scale, grads)
         lr = lr_schedule(step_idx)
-        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        if dist_update is not None:
+            new_params, new_state = dist_update(params, grads, opt_state, lr)
+        else:
+            new_params, new_state = optimizer.update(grads, opt_state,
+                                                     params, lr)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return new_params, new_state, metrics
 

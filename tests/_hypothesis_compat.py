@@ -1,0 +1,85 @@
+"""Use real ``hypothesis`` when installed (CI does: see requirements-ci.txt),
+otherwise a minimal deterministic fallback so the tier-1 suite collects and
+runs in containers without it (the seed suite died at collection here).
+
+The fallback implements just the subset this repo's property tests use —
+``given``, ``settings`` and the ``integers`` / ``sampled_from`` / ``floats``
+/ ``booleans`` strategies — drawing from a seeded ``random.Random`` so runs
+are reproducible.  No shrinking, no database; a failing example prints its
+drawn arguments in the assertion traceback instead.
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rnd):
+            return self._draw(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda r: r.choice(seq))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=8):
+            return _Strategy(lambda r: [
+                elements.draw(r)
+                for _ in range(r.randint(min_size, max_size))])
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        def deco(f):
+            f._max_examples = kwargs.get("max_examples", _FALLBACK_EXAMPLES)
+            return f
+        return deco
+
+    def given(*pos_strategies, **strategies):
+        def deco(f):
+            n = min(getattr(f, "_max_examples", _FALLBACK_EXAMPLES), 25)
+            sig = inspect.signature(f)
+            named = dict(strategies)
+            # positional strategies bind to the function's parameters in
+            # order, as real hypothesis does
+            for name, strat in zip(sig.parameters, pos_strategies):
+                named[name] = strat
+
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                for i in range(n):
+                    rnd = random.Random(0xC0FFEE + 10007 * i)
+                    drawn = {k: s.draw(rnd) for k, s in named.items()}
+                    f(*args, **kwargs, **drawn)
+
+            # hide the strategy-filled parameters from pytest's fixture
+            # resolution (real hypothesis does the same)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in named]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco

@@ -1,6 +1,6 @@
 """Paper §2.2 blocking solver tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import blocking
 

@@ -1,6 +1,6 @@
 """Property tests for the strip helpers behind the §3.4 distributed update."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,0 +1,199 @@
+"""Property tests for repro.comm (bucket planner + pack/unpack) and the
+§3.2 latency+bucket extension of core.balance.
+
+The multi-device equivalence matrix (bucketed update == per-tensor update ==
+serial update, across bucket sizes / wire dtypes / hierarchical schedule)
+lives in tests/test_distributed.py — it needs forced host devices.  Here we
+pin everything that is pure: the plan, the fusion-buffer round trip, and the
+cost model the sweep benchmark reports."""
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.comm.bucketer import (
+    CommConfig, pack_bucket, plan_buckets, unpack_buckets,
+)
+from repro.configs import XEON_E5_2698V3_FDR as FDR, \
+    XEON_E5_2666V3_10GBE as GBE
+from repro.core import balance
+
+MIB = 2**20
+
+
+def _sizes(seed, n):
+    rng = np.random.default_rng(seed)
+    # mix of tiny (bias-like) and larger (weight-like) leaves
+    return [int(s) for s in rng.choice(
+        [1, 3, 7, 32, 65, 128, 500, 2048], size=n)]
+
+
+def _tree(seed, n):
+    rng = np.random.default_rng(seed + 1)
+    return [jnp.asarray(rng.normal(size=(s,)), jnp.float32)
+            for s in _sizes(seed, n)]
+
+
+# ---------------------------------------------------------------------------
+# planner invariants
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12),
+       group=st.sampled_from([1, 2, 4, 8]),
+       bucket_bytes=st.sampled_from([0, 16, 256, 4096, 10**9]))
+@settings(max_examples=40, deadline=None)
+def test_plan_covers_every_leaf_once(seed, n, group, bucket_bytes):
+    tree = _tree(seed, n)
+    plan = plan_buckets(tree, group, bucket_bytes)
+    seen = sorted(s.index for b in plan.buckets for s in b.slots)
+    assert seen == list(range(n))
+    for b in plan.buckets:
+        # slots are laid out contiguously, in order, and the pad rounds the
+        # bucket to an equal strip per group member
+        off = 0
+        for s in b.slots:
+            assert s.offset == off
+            off += s.size
+        assert b.size == off
+        assert b.padded_size % group == 0
+        assert 0 <= b.padded_size - b.size < group
+    assert plan.total_elements == sum(int(x.size) for x in tree)
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12),
+       group=st.sampled_from([1, 4, 8]),
+       bucket_bytes=st.sampled_from([0, 16, 4096, 10**9]))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_round_trip(seed, n, group, bucket_bytes):
+    tree = _tree(seed, n)
+    plan = plan_buckets(tree, group, bucket_bytes)
+    bufs = [pack_bucket(tree, b) for b in plan.buckets]
+    for buf, b in zip(bufs, plan.buckets):
+        assert buf.shape == (b.padded_size,)
+    back = unpack_buckets(bufs, plan)
+    for a, b in zip(tree, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_collective_count_drops_from_tensors_to_bytes():
+    """The headline: per-tensor issues O(#tensors) collectives, bucketing
+    O(total_bytes / bucket_bytes)."""
+    n = 64
+    tree = [jnp.zeros((256,), jnp.float32)] * n      # 1 KiB each, 64 KiB all
+    per_tensor = plan_buckets(tree, 8, 0)
+    assert per_tensor.n_collectives == n
+    fused = plan_buckets(tree, 8, 8 * 1024)          # 8 KiB buckets
+    assert fused.n_collectives == 64 * 1024 // (8 * 1024)
+    whole = plan_buckets(tree, 8, 10**9)             # bucket > whole tree
+    assert whole.n_collectives == 1
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 12),
+       cap_kib=st.sampled_from([1, 4, 16]))
+@settings(max_examples=25, deadline=None)
+def test_greedy_bucket_count_is_near_optimal(seed, n, cap_kib):
+    """First-fit in order: every closed bucket + its successor leaf overflow
+    the cap, so at most 2*ceil(B/cap)+1 buckets when no leaf exceeds cap."""
+    cap = cap_kib * 1024
+    tree = _tree(seed, n)
+    if any(int(x.size) * 4 > cap for x in tree):
+        return
+    plan = plan_buckets(tree, 4, cap)
+    total = sum(int(x.size) for x in tree) * 4
+    assert plan.n_collectives <= 2 * math.ceil(total / cap) + 1
+
+
+def test_mixed_dtype_leaves_never_share_a_bucket():
+    """Concatenating mixed-dtype leaves would silently promote them; the
+    planner closes buckets on dtype change and unpack restores each leaf's
+    recorded dtype even if the optimizer promoted the buffer."""
+    tree = [jnp.ones((8,), jnp.bfloat16), jnp.ones((8,), jnp.float32),
+            jnp.ones((8,), jnp.bfloat16), jnp.ones((8,), jnp.bfloat16)]
+    plan = plan_buckets(tree, 2, 10**9)
+    for b in plan.buckets:
+        assert len({s.dtype for s in b.slots}) == 1
+    assert plan.n_collectives == 3       # bf16 | f32 | bf16+bf16
+    # bf16 byte accounting: 8 elements * 2 B = 16 B fits a 16 B cap exactly
+    assert plan_buckets([jnp.ones((8,), jnp.bfloat16)] * 2, 2,
+                        16).n_collectives == 2
+    bufs = [pack_bucket(tree, b) for b in plan.buckets]
+    # simulate optimizer promotion of every buffer to fp32
+    back = unpack_buckets([b.astype(jnp.float32) for b in bufs], plan)
+    for a, b in zip(tree, back):
+        assert b.dtype == a.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_oversize_leaf_gets_its_own_bucket():
+    tree = [jnp.zeros((4,), jnp.float32), jnp.zeros((10_000,), jnp.float32),
+            jnp.zeros((4,), jnp.float32)]
+    plan = plan_buckets(tree, 2, 1024)   # middle leaf is 40 KB > 1 KiB cap
+    big = [b for b in plan.buckets if any(s.size == 10_000 for s in b.slots)]
+    assert len(big) == 1 and len(big[0].slots) == 1
+
+
+def test_comm_config_validates_dtype():
+    assert CommConfig(reduce_dtype="bfloat16").wire_dtype == jnp.bfloat16
+    assert CommConfig().wire_dtype == jnp.float32
+    with pytest.raises(AssertionError):
+        CommConfig(reduce_dtype="float16")
+
+
+# ---------------------------------------------------------------------------
+# §3.2 latency + bucket cost model
+# ---------------------------------------------------------------------------
+@given(total_mib=st.sampled_from([8, 64, 512]),
+       g=st.sampled_from([4, 16, 64, 256]),
+       hw=st.sampled_from([FDR, GBE]))
+@settings(max_examples=30, deadline=None)
+def test_optimal_bucket_minimizes_model_time(total_mib, g, hw):
+    """The closed form sqrt(B*SWlat*BW*G) beats (or ties, within the ceil()
+    discretization) every power-of-two bucket size."""
+    total = total_mib * MIB
+    n_tensors = 200
+    b_star = balance.optimal_bucket_bytes(total, g, hw)
+    assert 64 * 1024 <= b_star <= total
+    t_star = balance.bucketed_allreduce_time(total, n_tensors, b_star, g, hw)
+    for b in [2**k * 1024 for k in range(4, 16)]:
+        t = balance.bucketed_allreduce_time(total, n_tensors, b, g, hw)
+        assert t_star <= t * 1.35 + 1e-12
+
+
+def test_bucketing_beats_per_tensor_in_latency_regime():
+    """Many small tensors: fusing into MiB buckets cuts the predicted time
+    (this is the regime the ISSUE calls out for VGG-A's conv/bias tensors)."""
+    total, n_tensors = 64 * MIB, 500
+    t_per_tensor = balance.bucketed_allreduce_time(total, n_tensors, 0,
+                                                   64, FDR)
+    t_bucketed = balance.bucketed_allreduce_time(total, n_tensors, 4 * MIB,
+                                                 64, FDR)
+    assert t_bucketed < t_per_tensor
+
+
+def test_collective_count_model():
+    assert balance.collective_count(64 * MIB, 500, 0) == 500
+    assert balance.collective_count(64 * MIB, 500, 4 * MIB) == 16
+    assert balance.collective_count(1, 500, 10**12) == 1
+
+
+def test_ring_time_scales_with_bytes_and_members():
+    t1 = balance.ring_collective_time(MIB, 8, FDR)
+    assert balance.ring_collective_time(2 * MIB, 8, FDR) > t1
+    assert balance.ring_collective_time(MIB, 16, FDR) > t1
+    assert balance.ring_collective_time(MIB, 1, FDR) == 0.0
+
+
+def test_hierarchical_beats_flat_ring_with_fast_pod_links():
+    """Two-level 16x8 with 4x in-pod bandwidth beats one flat 128-ring: the
+    cross-pod hop only moves strip bytes and the latency term shrinks from
+    2*(128-1) to 2*(16-1) + 2*(8-1) messages per bucket."""
+    total, n_tensors = 500 * MIB, 300
+    t_flat = balance.bucketed_allreduce_time(total, n_tensors, 4 * MIB,
+                                             128, FDR)
+    t_hier = balance.hierarchical_allreduce_time(total, n_tensors, 4 * MIB,
+                                                 16, 8, FDR,
+                                                 pod_bw=4 * FDR.link_bw)
+    assert t_hier < t_flat

@@ -15,7 +15,11 @@ def run_py(code: str, devices: int = 8) -> str:
     env = dict(os.environ,
                XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
                PYTHONPATH=SRC)
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+    # the snippets touch jax.sharding before importing repro, so load the
+    # 0.4.x API backfill first (a no-op on jax that has the real APIs)
+    prelude = "import repro.jaxcompat\n"
+    out = subprocess.run([sys.executable, "-c",
+                          prelude + textwrap.dedent(code)],
                          env=env, capture_output=True, text=True, timeout=300)
     assert out.returncode == 0, out.stderr[-4000:]
     return out.stdout
@@ -91,6 +95,153 @@ def test_distributed_sgd_equals_serial_multi_axis():
         for k in params:
             np.testing.assert_allclose(np.asarray(new_p2[k]),
                                        np.asarray(ref_p2[k]), rtol=1e-5)
+        print("OK")
+    """)
+
+
+def test_bucketed_update_equals_per_tensor_and_serial():
+    """The comm-subsystem equivalence matrix: the bucketed §3.4 update ==
+    the seed per-tensor update == the serial optimizer, across bucket sizes
+    (smaller than one tensor, mid, larger than the whole tree), both wire
+    dtypes, and both the flat and hierarchical ("pod","data") schedules."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.comm import CommConfig
+        from repro.optim import MomentumSGD
+        from repro.optim.dist import make_distributed_update
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+        opt = MomentumSGD(momentum=0.9, weight_decay=0.01)
+        params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) / 7,
+                  "b": jnp.ones((5,), jnp.float32),
+                  "c": jnp.cos(jnp.arange(40, dtype=jnp.float32))}
+        grads = jax.tree.map(lambda p: jnp.cos(p), params)
+
+        # serial reference: two optimizer steps
+        ref_p1, ref_s = opt.update(grads, opt.init(params), params, 0.05)
+        ref_p2, _ = opt.update(grads, ref_s, ref_p1, 0.05)
+
+        def run(comm):
+            init_fn, update_fn = make_distributed_update(
+                opt, mesh, data_axes=("pod", "data"), comm=comm)
+            with jax.set_mesh(mesh):
+                st = init_fn(params)
+                p1, st = jax.jit(update_fn)(params, grads, st, 0.05)
+                p2, st = jax.jit(update_fn)(p1, grads, st, 0.05)
+            return p2
+
+        # per-tensor (seed) path
+        pt = run(None)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(pt[k]),
+                                       np.asarray(ref_p2[k]), rtol=1e-5)
+
+        # bucket sizes: 8 B < any tensor; 64 B mid; 1 MiB > whole tree
+        for bucket_bytes in (8, 64, 1 << 20):
+            for hier in (False, True):
+                got = run(CommConfig(bucket_bytes=bucket_bytes,
+                                     hierarchical=hier))
+                for k in params:
+                    np.testing.assert_allclose(
+                        np.asarray(got[k]), np.asarray(ref_p2[k]),
+                        rtol=1e-5, err_msg=f"{bucket_bytes}/{hier}/{k}")
+
+        # bf16 wire: same update within bf16 rounding of the gradients
+        for hier in (False, True):
+            got = run(CommConfig(bucket_bytes=64, reduce_dtype="bfloat16",
+                                 hierarchical=hier))
+            for k in params:
+                np.testing.assert_allclose(
+                    np.asarray(got[k]), np.asarray(ref_p2[k]),
+                    rtol=2e-2, atol=2e-3, err_msg=f"bf16/{hier}/{k}")
+        print("OK")
+    """)
+
+
+def test_hierarchical_init_state_lands_on_owner_strips():
+    """Value-initialized optimizer state must be laid out in OWNER order:
+    under the hierarchical schedule member (p, d) owns strip d*G_out + p,
+    not its flat mesh index p*G_in + d.  Zeros-init optimizers mask this,
+    so probe with state initialized FROM the parameter strips and an update
+    that consumes it."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.comm import CommConfig
+        from repro.optim.dist import make_distributed_update
+
+        class StatefulOpt:
+            # state = the parameter values themselves (an EMA-like init);
+            # update mixes the state in, so misaligned strips change params
+            def init(self, params):
+                return jax.tree.map(lambda p: p + 0.0, params)
+            def update(self, grads, state, params, lr):
+                new_p = jax.tree.map(
+                    lambda p, g, s: p - lr * g + 0.5 * (s - p),
+                    params, grads, state)
+                return new_p, state
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+        opt = StatefulOpt()
+        params = {"w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6) / 11,
+                  "b": jnp.cos(jnp.arange(7, dtype=jnp.float32))}
+        grads = jax.tree.map(jnp.sin, params)
+        ref_p, _ = opt.update(grads, opt.init(params), params, 0.05)
+        for hier in (False, True):
+            comm = CommConfig(bucket_bytes=1 << 20, hierarchical=hier)
+            init_fn, update_fn = make_distributed_update(
+                opt, mesh, data_axes=("pod", "data"), comm=comm)
+            with jax.set_mesh(mesh):
+                st = init_fn(params)
+                p, st = jax.jit(update_fn)(params, grads, st, 0.05)
+            for k in params:
+                np.testing.assert_allclose(
+                    np.asarray(p[k]), np.asarray(ref_p[k]), rtol=1e-6,
+                    err_msg=f"hier={hier}/{k}")
+        print("OK")
+    """)
+
+
+def test_zero1_train_step_through_bucketer():
+    """make_train_step(dist_update=...) — the explicit ZeRO-1 path through
+    the bucketed fusion-buffer collectives — matches the serial train step
+    (loss, grad clip and all)."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.comm import CommConfig
+        from repro.optim import AdamW
+        from repro.optim.dist import make_distributed_update
+        from repro.optim.schedule import constant
+        from repro.train import make_train_step
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.asarray(rng.normal(size=(6, 3)), jnp.float32),
+                  "b": jnp.zeros((3,), jnp.float32)}
+        batch = {"x": jnp.asarray(rng.normal(size=(16, 6)), jnp.float32),
+                 "y": jnp.asarray(rng.normal(size=(16, 3)), jnp.float32)}
+        def loss(p, b):
+            return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+        opt = AdamW(weight_decay=0.1)
+        sched = constant(1e-2)
+
+        step_serial = make_train_step(loss, opt, sched)
+        p1, s1, m1 = jax.jit(step_serial)(params, opt.init(params), 0, batch)
+        p1, s1, m1 = jax.jit(step_serial)(p1, s1, 1, batch)
+
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        init_fn, update_fn = make_distributed_update(
+            opt, mesh, comm=CommConfig(bucket_bytes=64))
+        step_dist = make_train_step(loss, opt, sched, dist_update=update_fn)
+        with jax.set_mesh(mesh):
+            p2, s2, m2 = jax.jit(step_dist)(params, init_fn(params), 0, batch)
+            p2, s2, m2 = jax.jit(step_dist)(p2, s2, 1, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-6)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(p1[k]), np.asarray(p2[k]),
+                                       rtol=1e-5, atol=1e-6)
         print("OK")
     """)
 

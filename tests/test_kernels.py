@@ -1,7 +1,7 @@
 """Per-kernel allclose sweeps against the ref.py oracles (interpret mode)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

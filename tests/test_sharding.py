@@ -2,7 +2,7 @@
 the resolver is pure metadata against an abstract mesh)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
