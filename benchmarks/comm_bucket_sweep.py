@@ -15,6 +15,10 @@ the actual weight-tensor shapes), so they match what the bucketed
 """
 from __future__ import annotations
 
+import math
+
+import jax
+
 from repro.comm.bucketer import plan_buckets
 from repro.configs import (
     get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
@@ -30,41 +34,32 @@ G = 64           # the paper's 256-minibatch / 4-per-node operating point
 G_PODS, G_IN = 8, 16   # two-level composition of 128 nodes
 
 
-class _FakeLeaf:
-    """Shape-only stand-in so plan_buckets runs without materializing VGG-A."""
-    def __init__(self, *shape):
-        self.shape = tuple(shape)
-        self.size = 1
-        for s in shape:
-            self.size *= s
-
-
 def grad_tree(net: str):
-    """Weight + bias leaves of a paper CNN, in layer order."""
+    """Weight + bias leaves of a paper CNN — the family adapter's param
+    specs, i.e. exactly the tree (and tree order) the real bucketed
+    ``make_distributed_update`` plans over.  ``core.params.Spec`` is
+    shape-only, so plan_buckets runs without materializing VGG-A."""
+    from repro.api import adapter_for
     cfg = get_config(net)
-    leaves = []
-    for l in cfg.layers:
-        if l.kind == "conv":
-            leaves.append(_FakeLeaf(l.kernel, l.kernel, l.ifm, l.ofm))
-            leaves.append(_FakeLeaf(l.ofm))
-        elif l.kind == "fc":
-            leaves.append(_FakeLeaf(l.ifm, l.ofm))
-            leaves.append(_FakeLeaf(l.ofm))
-    return leaves
+    return jax.tree.leaves(adapter_for(cfg).param_specs(cfg))
+
+
+def _size(leaf) -> int:
+    return math.prod(leaf.shape)
 
 
 def rows():
     out = []
     for net in ("vgg-a", "overfeat-fast"):
         leaves = grad_tree(net)
-        total = sum(l.size for l in leaves) * SIZE_F32
+        total = sum(_size(l) for l in leaves) * SIZE_F32
         n_tensors = len(leaves)
         out.append((f"comm/{net}/n_tensors", n_tensors, ""))
         out.append((f"comm/{net}/grad_MiB", total / MIB, ""))
         # the serialization granularity of each schedule is its largest
         # single message: the biggest tensor for per-tensor, the biggest
         # fusion buffer for bucketed plans
-        max_leaf = max(l.size for l in leaves) * SIZE_F32
+        max_leaf = max(_size(l) for l in leaves) * SIZE_F32
         for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
             # per-tensor baseline: the seed schedule's collective count
             t0 = bucketed_allreduce_time(total, n_tensors, 0, G, hw,

@@ -1,18 +1,17 @@
 """The paper's own workload: VGG-A training with momentum SGD (reduced size
-for CPU), with the Pallas direct-conv kernel selectable for the forward.
+for CPU), assembled through ``repro.api`` — the family adapter picks the
+CNN loss/stream and the paper's optimizer; ``--use-pallas`` swaps the
+forward convs onto the Pallas direct-conv kernel.
 
     PYTHONPATH=src python examples/paper_cnn_training.py [--use-pallas]
 """
 import argparse
 
 import jax
+import jax.numpy as jnp
 
-from repro.configs import get_config, smoke_variant
-from repro.data import Prefetcher, stream_for
+from repro.api import RunSpec, compile_run
 from repro.models import cnn
-from repro.optim import MomentumSGD
-from repro.optim.schedule import constant
-from repro.train import Trainer, TrainerConfig, make_train_step
 
 
 def main(argv=None):
@@ -23,25 +22,26 @@ def main(argv=None):
                     help="route forward convs through the Pallas kernel")
     args = ap.parse_args(argv)
 
-    cfg = smoke_variant(get_config("vgg-a"))
-    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
-    opt = MomentumSGD(momentum=0.9)      # the paper's optimizer, unchanged
+    spec = RunSpec(arch="vgg-a", smoke=True, steps=args.steps,
+                   batch=args.batch, lr=5e-3, schedule="constant",
+                   log_every=10)
+    run = compile_run(spec)          # family default optimizer: momentum SGD
 
-    def loss(p, b):
-        logits = cnn.forward(p, cfg, b["images"],
-                             use_pallas=args.use_pallas)
-        import jax.numpy as jnp
-        lf = logits.astype(jnp.float32)
-        nll = jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(
-            lf, b["labels"][:, None], axis=-1)[:, 0]
-        return nll.mean()
+    if args.use_pallas:
+        # override the compiled loss with the Pallas-forward variant; the
+        # rest of the assembly (optimizer, data, trainer) is untouched
+        def pallas_loss(p, b):
+            logits = cnn.forward(p, run.cfg, b["images"], use_pallas=True)
+            lf = logits.astype(jnp.float32)
+            nll = jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(
+                lf, b["labels"][:, None], axis=-1)[:, 0]
+            return nll.mean()
+        from repro.train import make_train_step
+        run.train_step = make_train_step(pallas_loss, run.optimizer,
+                                         run.lr_schedule)
 
-    step = make_train_step(loss, opt, constant(5e-3))
-    data = Prefetcher(stream_for(cfg, args.batch, 0))
-    trainer = Trainer(step, TrainerConfig(total_steps=args.steps,
-                                          log_every=10))
-    params, _, hist = trainer.fit(params, opt.init(params), data)
-    data.close()
+    hist = run.fit()
+    run.close()
     print(f"VGG-A(smoke) loss {hist[0]['loss']:.3f} -> "
           f"{hist[-1]['loss']:.3f} (pallas={args.use_pallas})")
 

@@ -1,40 +1,29 @@
 """Quickstart: train a reduced LLaMA-3-family model for 30 steps on CPU,
-then generate from it.
+then generate from it — three lines from spec to training via ``repro.api``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.configs import get_config, smoke_variant
-from repro.core.sharding import ShardingCtx
-from repro.data import Prefetcher, stream_for
-from repro.models import transformer
-from repro.optim import AdamW, warmup_cosine
+from repro.api import RunSpec, compile_run
 from repro.serve import generate
-from repro.train import Trainer, TrainerConfig, make_train_step
 
 
 def main():
-    cfg = smoke_variant(get_config("llama3-8b"))
-    print(f"arch: {cfg.name}  layers={cfg.num_layers} d={cfg.d_model} "
-          f"params={sum(x.size for x in jax.tree.leaves(transformer.init_params(cfg, jax.random.PRNGKey(0)))):,}")
+    spec = RunSpec(arch="llama3-8b", smoke=True, steps=30, batch=8, seq=64,
+                   lr=3e-3, warmup_steps=5, weight_decay=0.01, log_every=5)
+    run = compile_run(spec)
+    n_params = sum(x.size for x in jax.tree.leaves(run.params))
+    print(f"arch: {run.cfg.name}  layers={run.cfg.num_layers} "
+          f"d={run.cfg.d_model} params={n_params:,}")
 
-    ctx = ShardingCtx()                       # single device; mesh-free
-    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
-    opt = AdamW(weight_decay=0.01)
-    step = make_train_step(
-        lambda p, b: transformer.lm_loss(p, cfg, ctx, b), opt,
-        warmup_cosine(3e-3, 5, 30))
-
-    data = Prefetcher(stream_for(cfg, batch=8, seq=64))
-    trainer = Trainer(step, TrainerConfig(total_steps=30, log_every=5))
-    params, _, hist = trainer.fit(params, opt.init(params), data)
-    data.close()
+    hist = run.fit()
+    run.close()
     assert hist[-1]["loss"] < hist[0]["loss"]
 
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
-                                cfg.vocab_size)
-    out = generate(params, cfg, ctx, prompt, 16, temperature=0.0)
+                                run.cfg.vocab_size)
+    out = generate(run.params, run.cfg, run.ctx, prompt, 16, temperature=0.0)
     print("generated:", out[0].tolist())
 
 

@@ -1,6 +1,7 @@
 """End-to-end driver (deliverable b): train a ~100M-parameter LM for a few
-hundred steps with the full substrate — config system, data pipeline with
-background prefetch, AdamW + warmup-cosine, periodic checkpointing, resume.
+hundred steps with the full substrate — declarative ``RunSpec`` assembly,
+data pipeline with background prefetch, AdamW + warmup-cosine, periodic
+checkpointing, resume.
 
 Default model: ``llama-100m`` (100.7M params, llama3-family blocks;
 ``--arch xlstm-125m`` trains the assigned SSM config instead).
@@ -12,13 +13,8 @@ import os
 
 import jax
 
+from repro.api import RunSpec, compile_run
 from repro.checkpoint import latest_step, restore, save
-from repro.configs import get_config
-from repro.core.sharding import ShardingCtx
-from repro.data import Prefetcher, stream_for
-from repro.models import transformer
-from repro.optim import AdamW, warmup_cosine
-from repro.train import Trainer, TrainerConfig, make_train_step
 
 
 def main(argv=None):
@@ -31,33 +27,26 @@ def main(argv=None):
     ap.add_argument("--arch", default="llama-100m")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    ctx = ShardingCtx()
-    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
-    n = sum(x.size for x in jax.tree.leaves(params))
-    print(f"training {cfg.name}: {n / 1e6:.1f}M params, "
+    spec = RunSpec(arch=args.arch, steps=args.steps, batch=args.batch,
+                   seq=args.seq, lr=args.lr, weight_decay=0.1,
+                   log_every=10, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=max(args.steps // 3, 50))
+    run = compile_run(spec)
+    n = sum(x.size for x in jax.tree.leaves(run.params))
+    print(f"training {run.cfg.name}: {n / 1e6:.1f}M params, "
           f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
 
-    opt = AdamW(weight_decay=0.1)
-    opt_state = opt.init(params)
     start = 0
     if (s := latest_step(args.ckpt_dir)):
-        out, start = restore(args.ckpt_dir, s, params=params,
-                             opt_state=opt_state)
-        params, opt_state = out["params"], out["opt_state"]
+        out, start = restore(args.ckpt_dir, s, params=run.params,
+                             opt_state=run.opt_state)
+        run.params, run.opt_state = out["params"], out["opt_state"]
         print(f"resumed from step {start}")
 
-    step = make_train_step(
-        lambda p, b: transformer.lm_loss(p, cfg, ctx, b), opt,
-        warmup_cosine(args.lr, args.steps // 20, args.steps))
-    data = Prefetcher(stream_for(cfg, args.batch, args.seq), depth=2)
-    trainer = Trainer(step, TrainerConfig(
-        total_steps=args.steps, log_every=10,
-        ckpt_every=max(args.steps // 3, 50), ckpt_dir=args.ckpt_dir))
-    params, opt_state, hist = trainer.fit(params, opt_state, data,
-                                          start_step=start)
-    data.close()
-    save(args.ckpt_dir, args.steps, params=params, opt_state=opt_state)
+    hist = run.fit(start_step=start)
+    run.close()
+    save(args.ckpt_dir, args.steps, params=run.params,
+         opt_state=run.opt_state)
     print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
     with open(os.path.join(args.ckpt_dir, "history.csv"), "w") as f:
         f.write("step,loss\n")

@@ -1,0 +1,25 @@
+"""``repro.api`` — the declarative run-assembly layer.
+
+Three lines from spec to training (the paper's §4 framework composition of
+data handling, compute and synchronous communication behind one interface):
+
+    from repro.api import RunSpec, compile_run
+    run = compile_run(RunSpec(arch="vgg-a", smoke=True, parallel="zero1"))
+    run.fit()
+
+``RunSpec`` declares the run (arch, mesh topology, parallelism mode, comm
+knobs, optimizer, trainer settings); ``compile_run`` resolves the model
+family through the adapter registry, builds the mesh, places params, picks
+the update path (serial / dp / explicit-bucketed zero1 / GSPMD zero1) and
+returns a ready :class:`Run`.  New model families plug in with
+``register_family``; the stable low-level layer (``make_train_step``,
+``make_distributed_update``) is unchanged underneath.
+"""
+from repro.api.assemble import compile_run  # noqa: F401
+from repro.api.families import (  # noqa: F401
+    FamilyAdapter, adapter_for, families, register_family,
+)
+from repro.api.run import Run  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    MIB, MeshSpec, OPTIMIZERS, PARALLEL_MODES, RunSpec, SCHEDULES,
+)

@@ -1,0 +1,88 @@
+"""The executable product of ``compile_run``: params, state, step, data, fit.
+
+A :class:`Run` owns everything a training loop needs, already assembled and
+placed: the jit-ready ``train_step``, the (mesh-placed) ``params`` and
+``opt_state``, a lazily-started prefetching ``data`` iterator, and ``fit()``
+— the paper's §4 composition of data handling, compute and communication
+behind one object.  The low-level layers (``make_train_step``,
+``make_distributed_update``) stay public and stable underneath; a Run is
+just their assembly.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core.sharding import ShardingCtx, ShardingRules
+from repro.data.pipeline import Prefetcher, make_placer
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@dataclass
+class Run:
+    """An assembled training run.  Mutated in place by ``fit`` (params and
+    opt_state advance; the train_step buffers are donated)."""
+    spec: Any                       # the RunSpec this run was compiled from
+    cfg: Any                        # resolved (possibly smoke) family config
+    family: Any                     # FamilyAdapter
+    mesh: Optional[Mesh]
+    rules: ShardingRules
+    ctx: ShardingCtx
+    loss_fn: Callable
+    optimizer: Any
+    lr_schedule: Callable
+    train_step: Callable            # (params, opt_state, step, batch) -> ...
+    params: Any
+    opt_state: Any
+    _data: Optional[Prefetcher] = field(default=None, repr=False)
+
+    def _mesh_scope(self):
+        return (jax.set_mesh(self.mesh) if self.mesh is not None
+                else contextlib.nullcontext())
+
+    @property
+    def data(self) -> Prefetcher:
+        """Background-prefetching batch iterator, device-placed for the
+        run's mesh.  Created on first access (so compiling a Run never
+        starts threads)."""
+        if self._data is None:
+            s = self.spec
+            stream = self.family.stream(self.cfg, s.batch, s.seq, s.seed)
+            self._data = Prefetcher(stream,
+                                    place=make_placer(self.mesh, self.rules))
+        return self._data
+
+    def step(self, batch, step_idx: int = 0):
+        """Run one (jit) train step on an explicit batch; advances the run's
+        params/opt_state and returns the metrics dict."""
+        with self._mesh_scope():
+            self.params, self.opt_state, metrics = jax.jit(self.train_step)(
+                self.params, self.opt_state, step_idx, batch)
+        return metrics
+
+    def fit(self, start_step: int = 0, log_fn=print):
+        """Train for ``spec.steps`` steps; returns the metrics history."""
+        s = self.spec
+        tcfg = TrainerConfig(total_steps=s.steps, log_every=s.log_every,
+                             ckpt_every=s.ckpt_every, ckpt_dir=s.ckpt_dir)
+        trainer = Trainer(self.train_step, tcfg)
+        with self._mesh_scope():
+            self.params, self.opt_state, history = trainer.fit(
+                self.params, self.opt_state, self.data,
+                start_step=start_step, log_fn=log_fn)
+        return history
+
+    def close(self):
+        if self._data is not None:
+            self._data.close()
+            self._data = None
+
+    def __enter__(self) -> "Run":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

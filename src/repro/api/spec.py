@@ -1,0 +1,119 @@
+"""Declarative run description: ``RunSpec`` is WHAT to train, not HOW.
+
+A ``RunSpec`` names an architecture (by registry id or as a concrete config
+object), a mesh topology, a parallelism mode, the communication knobs, the
+optimizer/schedule choice and the trainer/data settings.  ``compile_run``
+(``repro.api.assemble``) turns it into an executable :class:`~repro.api.run.Run`.
+
+Parallelism modes (the paper's §3/§4 composition points):
+
+``serial``
+    Single-program baseline: no mesh, plain ``optimizer.update``.  The
+    reference every distributed mode is property-tested against.
+``dp``
+    pjit/GSPMD data parallelism: batch sharded over the ("pod","data") axes,
+    gradient all-reduce implicit, optimizer state replicated.
+``zero1``
+    The paper's §3.4 part-reduce / part-broadcast strip update, explicit:
+    gradients flow through the bucketed fusion-buffer collectives of
+    ``repro.comm`` (``make_distributed_update`` under ``shard_map``) and each
+    member updates only its 1/G strip.  ``comm`` carries bucket size, wire
+    dtype and the hierarchical two-level schedule.
+``zero1-gspmd``
+    Same strip scheme through the compiler instead: optimizer state is
+    sharded over the data axes (``zero1_state_shardings``) and XLA
+    factorizes the all-reduce into reduce-scatter + all-gather.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Tuple, Union
+
+from repro.comm.bucketer import CommConfig
+
+PARALLEL_MODES = ("serial", "dp", "zero1", "zero1-gspmd")
+OPTIMIZERS = ("adamw", "sgd")
+SCHEDULES = ("warmup_cosine", "constant")
+
+MIB = 2 ** 20
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Host-mesh topology: ``("pod", "data", "model")`` when ``pods > 1``,
+    ``("data", "model")`` otherwise; the data extent is whatever remains of
+    the visible devices after pods x model_ways."""
+    pods: int = 1
+    model_ways: int = 1
+
+    def __post_init__(self):
+        assert self.pods >= 1 and self.model_ways >= 1, (
+            f"pods/model_ways must be >= 1, got {self.pods}/{self.model_ways}")
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return (("pod", "data", "model") if self.pods > 1
+                else ("data", "model"))
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """The paper's G data-parallel group axes."""
+        return ("pod", "data") if self.pods > 1 else ("data",)
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """Declarative description of one training run.
+
+    arch:       registry id (``configs.ALL_ARCHS``) or a concrete config
+                object of any registered family.
+    smoke:      reduce the config to the family's CPU-sized smoke variant.
+    parallel:   one of ``PARALLEL_MODES`` (see module docstring).
+    mesh:       topology for the non-serial modes (ignored for ``serial``).
+    comm:       communication knobs for ``zero1``; ``None`` picks a default
+                ``CommConfig`` (hierarchical iff the mesh has a pod axis).
+    optimizer:  ``"adamw"`` / ``"sgd"``; ``None`` = family default (momentum
+                SGD for the paper's CNN/DNN workloads, AdamW otherwise).
+    """
+    arch: Union[str, Any]
+    smoke: bool = False
+    parallel: str = "serial"
+    mesh: MeshSpec = field(default_factory=MeshSpec)
+    comm: Optional[CommConfig] = None
+    # optimizer + schedule
+    optimizer: Optional[str] = None
+    lr: float = 1e-3
+    weight_decay: Optional[float] = None   # None = optimizer default
+    momentum: float = 0.9
+    schedule: str = "warmup_cosine"
+    warmup_steps: Optional[int] = None     # None = steps // 20 (min 1)
+    grad_clip: float = 1.0
+    # trainer / data
+    steps: int = 50
+    batch: int = 8
+    seq: int = 128
+    seed: int = 0
+    log_every: int = 5
+    ckpt_every: int = 0                    # 0 = disabled
+    ckpt_dir: Optional[str] = None
+
+    def __post_init__(self):
+        if self.parallel not in PARALLEL_MODES:
+            raise ValueError(f"parallel must be one of {PARALLEL_MODES}, "
+                             f"got {self.parallel!r}")
+        if self.optimizer is not None and self.optimizer not in OPTIMIZERS:
+            raise ValueError(f"optimizer must be one of {OPTIMIZERS}, "
+                             f"got {self.optimizer!r}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                             f"got {self.schedule!r}")
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.comm is not None and self.parallel != "zero1":
+            raise ValueError(
+                "comm (bucket size / wire dtype / hierarchical) only applies "
+                "to the explicit bucketed path — set parallel='zero1' "
+                f"(got parallel={self.parallel!r})")
+
+    def replace(self, **kw) -> "RunSpec":
+        return replace(self, **kw)

@@ -16,8 +16,8 @@ which keeps HLO size (and compile time) independent of depth.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds understood by models/transformer.py

@@ -6,7 +6,6 @@ from typing import Union
 
 from repro.configs.base import (
     ModelConfig, CNNConfig, DNNConfig, InputShape, INPUT_SHAPES,
-    BLOCK_MAMBA, BLOCK_SHARED_ATTN, BLOCK_MLSTM, BLOCK_SLSTM,
 )
 
 # assigned pool (10) + the paper's own workloads (3)
@@ -51,67 +50,9 @@ def get_input_shape(name: str) -> InputShape:
 
 def smoke_variant(cfg: AnyConfig) -> AnyConfig:
     """Reduced variant of the same family for CPU smoke tests:
-    ≤2 pattern repeats, d_model ≤ 512, ≤4 experts, small vocab."""
-    if isinstance(cfg, CNNConfig):
-        # keep first two convs + last fc, shrink maps
-        from repro.configs.base import ConvLayerSpec as L
-        return CNNConfig(
-            name=cfg.name + "-smoke", source=cfg.source, image_size=32,
-            num_classes=16,
-            layers=(
-                L("conv", ifm=3, ofm=16, kernel=3, stride=1, pad=1, out_hw=32),
-                L("pool", out_hw=16),
-                L("conv", ifm=16, ofm=32, kernel=3, stride=1, pad=1, out_hw=16),
-                L("pool", out_hw=8),
-                L("fc", ifm=32 * 8 * 8, ofm=64, out_hw=1),
-                L("fc", ifm=64, ofm=16, out_hw=1),
-            ),
-        )
-    if isinstance(cfg, DNNConfig):
-        return DNNConfig(name=cfg.name + "-smoke", source=cfg.source,
-                         input_dim=40, hidden_dim=64, num_hidden=3,
-                         output_dim=32)
+    ≤2 pattern repeats, d_model ≤ 512, ≤4 experts, small vocab.
 
-    unit = cfg.block_pattern
-    # keep the heterogeneity of the unit but only 1-2 repeats
-    repeats = 1 if len(unit) > 2 else 2
-    d_model = min(cfg.d_model, 256)
-    head_dim = 32
-    heads = max(2, min(4, cfg.num_heads))
-    kv = max(1, min(heads, cfg.num_kv_heads))
-    while heads % kv:
-        kv -= 1
-    # rescale M-RoPE sections to the reduced head_dim (keep 1/4:3/8:3/8)
-    mrope_sections = cfg.mrope_sections
-    if cfg.mrope:
-        half = head_dim // 2
-        a = half // 4
-        b = (half - a) // 2
-        mrope_sections = (a, b, half - a - b)
-    return cfg.replace(
-        num_layers=repeats * len(unit),
-        pattern_repeats=repeats,
-        mrope_sections=mrope_sections,
-        d_model=d_model,
-        num_heads=heads,
-        num_kv_heads=kv,
-        head_dim=head_dim,
-        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
-        vocab_size=min(cfg.vocab_size, 512),
-        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
-        num_experts_per_tok=min(cfg.num_experts_per_tok, 2) if cfg.num_experts else 0,
-        # dropless in smoke tests so decode == train-path routing exactly
-        moe_capacity_factor=(min(cfg.num_experts, 4)
-                             / max(1, min(cfg.num_experts_per_tok, 2))
-                             if cfg.num_experts else 1.25),
-        moe_d_ff=min(cfg.moe_d_ff, 128) if cfg.moe_d_ff else 0,
-        num_shared_experts=min(cfg.num_shared_experts, 1),
-        shared_expert_d_ff=min(cfg.shared_expert_d_ff, 128),
-        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
-        ssm_heads=min(cfg.ssm_heads, 8) if cfg.ssm_heads else 0,
-        sliding_window=min(cfg.sliding_window, 64),
-        long_context_window=64,
-        vision_tokens=16,
-        remat="none",
-        fsdp=False,
-    )
+    The reduction recipe lives with each family's adapter
+    (``repro.api.families``); this stays as the stable entry point."""
+    from repro.api.families import adapter_for
+    return adapter_for(cfg).smoke(cfg)

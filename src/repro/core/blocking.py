@@ -17,10 +17,8 @@ contribution — is unchanged.
 """
 from __future__ import annotations
 
-import functools
-import math
 from dataclasses import dataclass
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import List, Optional
 
 LANE = 128      # TPU lane width / MXU tile edge
 SUBLANE = 8     # f32 sublane
@@ -144,7 +142,6 @@ def solve_conv_blocking(minibatch: int, ifm: int, ofm: int,
                         # output tile is resident while the ifm loop runs.
                         in_h = b_oh * stride + kernel - 1
                         in_w = b_ow * stride + kernel - 1
-                        n_ifm_steps = ifm // b_ifm
                         traffic = size_data * (
                             b_mb * b_ofm * b_oh * b_ow            # out, once
                             + b_mb * ifm * in_h * in_w            # all ifm

@@ -13,13 +13,13 @@ overrides for FSDP weight sharding and the long-context decode cache layout.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Tuple
 
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, InputShape, HardwareConfig
 from repro.core import balance
-from repro.core.sharding import ShardingRules, DEFAULT_RULES
+from repro.core.sharding import ShardingRules
 
 
 @dataclass(frozen=True)

@@ -14,16 +14,15 @@ from __future__ import annotations
 
 import queue
 import threading
-from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.configs.base import ModelConfig, CNNConfig, DNNConfig
+from repro.configs.base import ModelConfig
 
 
 # ---------------------------------------------------------------------------
@@ -105,15 +104,10 @@ def audio_stream(cfg: ModelConfig, batch: int, seq: int,
 
 
 def stream_for(cfg, batch: int, seq: int, seed: int = 0):
-    if isinstance(cfg, CNNConfig):
-        return image_stream(cfg.image_size, cfg.num_classes, batch, seed)
-    if isinstance(cfg, DNNConfig):
-        return asr_frame_stream(cfg.input_dim, cfg.output_dim, batch, seed)
-    if cfg.frontend == "vision":
-        return vlm_stream(cfg, batch, seq - cfg.vision_tokens, seed)
-    if cfg.frontend == "audio":
-        return audio_stream(cfg, batch, seq, seed)
-    return lm_token_stream(cfg.vocab_size, batch, seq, seed)
+    """Family dispatch lives in the adapter registry (``repro.api``); this
+    stays as the stable entry point over the raw stream constructors."""
+    from repro.api.families import adapter_for  # lazy: api sits above data
+    return adapter_for(cfg).stream(cfg, batch, seq, seed)
 
 
 # ---------------------------------------------------------------------------

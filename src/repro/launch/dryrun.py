@@ -6,12 +6,12 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.api.families import adapter_for
 from repro.configs import (
     ModelConfig, TPU_V5E, get_config, get_input_shape, ASSIGNED_ARCHS,
     INPUT_SHAPES,
@@ -55,8 +55,16 @@ def model_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
     return 2.0 * n * batch  # decode: one token per request
 
 
+def _cost_dict(cost):
+    """jax 0.4.x returns cost_analysis() as a one-element list of dicts."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
 def _combine(full_cost, unit_cost, full_hlo, unit_hlo, repeats: int):
     """XLA counts a while-loop body once; totals = full + (R-1) * unit."""
+    full_cost, unit_cost = _cost_dict(full_cost), _cost_dict(unit_cost)
     r = repeats - 1
     flops = full_cost.get("flops", 0.0) + r * unit_cost.get("flops", 0.0)
     nbytes = full_cost.get("bytes accessed", 0.0) \
@@ -106,15 +114,17 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.perf_counter()
     # ======================= full program ==================================
     if shape.kind == "train":
+        # family adapter resolves loss/axes (repro.api registry) — the same
+        # seam compile_run uses for the concrete runs
+        family = adapter_for(cfg)
         opt = AdamW(weight_decay=0.01)
         opt_state = jax.eval_shape(opt.init, params)
-        st_sh = zero1_state_shardings(opt_state, transformer.param_axes(cfg),
+        st_sh = zero1_state_shardings(opt_state, family.param_axes(cfg),
                                       mesh, rules)
         opt_state = _with_shardings(opt_state, st_sh)
         batch = sp.abstract_batch(cfg, shape, mesh, rules)
-        step = make_train_step(
-            lambda p, b: transformer.lm_loss(p, cfg, ctx, b),
-            opt, constant(1e-3))
+        step = make_train_step(family.make_loss(cfg, ctx), opt,
+                               constant(1e-3))
         step_idx = jax.ShapeDtypeStruct((), jnp.int32)
         lowered = jax.jit(step).lower(params, opt_state, step_idx, batch)
     elif shape.kind == "prefill":
@@ -151,7 +161,6 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.perf_counter() - t0
 
     # ======================= unit program (one repeat) =====================
-    have_cache = shape.kind != "train"
     update_cache = shape.kind == "prefill"
 
     def unit_fwd(block_params, shared_p, x, positions, block_caches):

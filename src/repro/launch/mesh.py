@@ -28,14 +28,25 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_host_mesh(model_ways: int = 1) -> Mesh:
-    """Best-effort mesh over whatever devices exist (examples, tests)."""
+def make_host_mesh(model_ways: int = 1, pods: int = 1) -> Mesh:
+    """Best-effort mesh over whatever devices exist (examples, tests).
+
+    ``pods > 1`` asks for the three-axis ("pod", "data", "model") topology
+    (the §3.3 group composition); both counts are clamped to what the host
+    actually has, so a 1-device box degrades to a (1, 1) mesh."""
     n = len(jax.devices())
     model_ways = max(1, min(model_ways, n))
-    data = n // model_ways
-    return jax.make_mesh((data, model_ways), ("data", "model"),
-                         devices=jax.devices()[: data * model_ways],
-                         axis_types=(AxisType.Auto,) * 2)
+    pods = max(1, min(pods, n // model_ways))
+    data = n // (model_ways * pods)
+    if pods > 1:
+        shape = (pods, data, model_ways)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (data, model_ways)
+        axes = ("data", "model")
+    ndev = pods * data * model_ways
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev],
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def mesh_devices(mesh: Mesh) -> int:

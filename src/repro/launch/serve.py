@@ -8,7 +8,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_variant, ASSIGNED_ARCHS
 from repro.core.sharding import ShardingCtx

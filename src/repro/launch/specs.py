@@ -3,11 +3,11 @@ weak-type-correct, shardable, zero allocation.  Consumed by launch/dryrun.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, InputShape
 from repro.core.params import Spec

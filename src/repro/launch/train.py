@@ -1,5 +1,13 @@
 """Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
 
+A thin argparse shim over the declarative run-assembly API: flags build a
+``repro.api.RunSpec``, ``compile_run`` does the assembly (family resolution,
+mesh, placement, update-path selection), and ``Run.fit`` trains.
+
+    # the paper's §3.4 strip update through the bucketed comm subsystem
+    python -m repro.launch.train --arch vgg-a --smoke \\
+        --parallel zero1 --bucket-mb 4 --wire-dtype bf16
+
 On CPU (this container) use --smoke for the reduced config; on a real TPU
 slice the full config shards across the detected devices with the same
 rules/plan machinery the dry-run exercises."""
@@ -7,85 +15,74 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
+from repro.api import MIB, MeshSpec, PARALLEL_MODES, RunSpec, compile_run
+from repro.comm import CommConfig
+from repro.configs import ALL_ARCHS
 
-from repro.configs import get_config, smoke_variant, ASSIGNED_ARCHS, PAPER_ARCHS
-from repro.configs.base import CNNConfig, DNNConfig
-from repro.core.params import Spec
-from repro.core.sharding import ShardingCtx, ShardingRules
-from repro.data import Prefetcher, make_placer, stream_for
-from repro.launch.mesh import make_host_mesh
-from repro.models import cnn, dnn, transformer
-from repro.optim import AdamW, MomentumSGD, warmup_cosine
-from repro.train import Trainer, TrainerConfig, make_train_step
+WIRE_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
 
 
-def build(cfg, mesh, rules):
-    ctx = ShardingCtx(mesh, rules)
-    if isinstance(cfg, CNNConfig):
-        init = lambda k: cnn.init_params(cfg, k)
-        loss = lambda p, b: cnn.loss_fn(p, cfg, b, ctx)
-        sp_tree = cnn.param_specs(cfg)
-    elif isinstance(cfg, DNNConfig):
-        init = lambda k: dnn.init_params(cfg, k)
-        loss = lambda p, b: dnn.loss_fn(p, cfg, b, ctx)
-        sp_tree = dnn.param_specs(cfg)
-    else:
-        init = lambda k: transformer.init_params(cfg, k)
-        loss = lambda p, b: transformer.lm_loss(p, cfg, ctx, b)
-        sp_tree = transformer.param_specs(cfg)
-    return init, loss, sp_tree, ctx
+def spec_from_args(args) -> RunSpec:
+    comm = None
+    if args.bucket_mb is not None or args.wire_dtype != "fp32":
+        bucket_mb = 4.0 if args.bucket_mb is None else args.bucket_mb
+        comm = CommConfig(bucket_bytes=int(bucket_mb * MIB),
+                          reduce_dtype=WIRE_DTYPES[args.wire_dtype],
+                          hierarchical=args.pods > 1)
+    ckpt_every = 0
+    if args.ckpt_dir:
+        ckpt_every = args.ckpt_every if args.ckpt_every \
+            else max(args.steps // 5, 1)
+    return RunSpec(
+        arch=args.arch, smoke=args.smoke, parallel=args.parallel,
+        mesh=MeshSpec(pods=args.pods, model_ways=args.model_ways),
+        comm=comm, optimizer=args.optimizer, lr=args.lr,
+        steps=args.steps, batch=args.batch, seq=args.seq, seed=args.seed,
+        log_every=5, ckpt_every=ckpt_every, ckpt_dir=args.ckpt_dir)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True,
-                    choices=list(ASSIGNED_ARCHS) + list(PAPER_ARCHS))
+    ap.add_argument("--arch", required=True, choices=list(ALL_ARCHS))
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--parallel", default="dp", choices=list(PARALLEL_MODES),
+                    help="serial | dp (pjit/GSPMD) | zero1 (explicit "
+                         "bucketed §3.4 strips) | zero1-gspmd")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod axis extent (>1 adds the cross-pod "
+                         "hierarchical hop)")
     ap.add_argument("--model-ways", type=int, default=1)
-    ap.add_argument("--optimizer", default="adamw",
-                    choices=["adamw", "sgd"])
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="fusion-buffer size in MiB for --parallel zero1 "
+                         "(default 4)")
+    ap.add_argument("--wire-dtype", default="fp32", choices=list(WIRE_DTYPES),
+                    help="gradient part-reduce wire dtype (zero1)")
+    ap.add_argument("--optimizer", default=None,
+                    choices=["adamw", "sgd"],
+                    help="default: family choice (momentum SGD for the "
+                         "paper's CNN/DNN, AdamW for transformers)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint period in steps (default: steps/5 "
+                         "when --ckpt-dir is set)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if (args.bucket_mb is not None or args.wire_dtype != "fp32") \
+            and args.parallel != "zero1":
+        ap.error("--bucket-mb / --wire-dtype configure the explicit "
+                 "bucketed collectives; add --parallel zero1")
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = smoke_variant(cfg)
-    mesh = make_host_mesh(args.model_ways) if len(jax.devices()) > 1 else None
-    rules = ShardingRules()
-    init, loss, sp_tree, ctx = build(cfg, mesh, rules)
-
-    key = jax.random.PRNGKey(args.seed)
-    params = init(key)
-    if mesh is not None:
-        shardings = jax.tree.map(
-            lambda s: rules.sharding(s.axes, s.shape, mesh), sp_tree,
-            is_leaf=lambda x: isinstance(x, Spec))
-        params = jax.tree.map(jax.device_put, params, shardings)
-
-    opt = AdamW(weight_decay=0.01) if args.optimizer == "adamw" \
-        else MomentumSGD(momentum=0.9)
-    opt_state = opt.init(params)
-    sched = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
-    step = make_train_step(loss, opt, sched)
-
-    placer = make_placer(mesh, rules)
-    data = Prefetcher(stream_for(cfg, args.batch, args.seq, args.seed),
-                      place=placer)
-    tcfg = TrainerConfig(total_steps=args.steps, log_every=5,
-                         ckpt_every=0 if not args.ckpt_dir else args.steps,
-                         ckpt_dir=args.ckpt_dir)
-    trainer = Trainer(step, tcfg)
-    params, opt_state, hist = trainer.fit(params, opt_state, data)
-    data.close()
+    run = compile_run(spec_from_args(args))
+    print(f"arch: {run.cfg.name}  family={run.family.family}  "
+          f"parallel={run.spec.parallel}  "
+          f"mesh={dict(run.mesh.shape) if run.mesh is not None else None}")
+    hist = run.fit()
+    run.close()
     print(f"final loss: {hist[-1]['loss']:.4f}")
     return hist
 

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import CNNConfig, ConvLayerSpec
+from repro.configs.base import CNNConfig
 from repro.core.params import Spec, init_tree
 from repro.core.sharding import ShardingCtx
 from repro.kernels import ops as kops

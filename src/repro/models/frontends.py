@@ -8,12 +8,8 @@ is a data-layout property, not a codec property).
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-
-from repro.configs.base import ModelConfig
 
 
 def vision_stub_embeds(key: jax.Array, batch: int, n_tokens: int,

@@ -284,11 +284,9 @@ def attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
     if cfg.mrope:
         q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
         k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
-        pos_scalar = positions[..., 0]
     else:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-        pos_scalar = positions
     q = ctx.constrain(q, "batch", "seq", "heads", "head_dim")
     k = ctx.constrain(k, "batch", "seq", "kv_heads", "head_dim")
     v = ctx.constrain(v, "batch", "seq", "kv_heads", "head_dim")

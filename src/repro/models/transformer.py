@@ -15,8 +15,7 @@ params.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,7 @@ from repro.configs.base import (
 from repro.core.params import Spec, init_tree, axes_tree as _axes_tree
 from repro.core.sharding import ShardingCtx
 from repro.models import layers, moe, ssm
-from repro.models.layers import AttnCache, attention_block, mlp_block, rms_norm
+from repro.models.layers import attention_block, mlp_block, rms_norm
 
 # register cache dataclasses as pytrees
 for _cls in (layers.AttnCache, ssm.MambaCache, ssm.MlstmCache, ssm.SlstmCache):
@@ -252,7 +251,6 @@ def forward(params, cfg: ModelConfig, ctx: ShardingCtx, *,
                      if cfg.mrope else pos1)
 
     shared_p = params.get("shared")
-    R = cfg.pattern_repeats
     have_cache = caches is not None
     aux0 = jnp.zeros((), jnp.float32)
     body = make_scan_body(cfg, ctx, shared_p, positions,

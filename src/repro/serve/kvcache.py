@@ -7,9 +7,6 @@ from __future__ import annotations
 
 from typing import Dict
 
-import jax
-import numpy as np
-
 from repro.configs.base import (
     ModelConfig, ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN, BLOCK_MAMBA,
     BLOCK_MLSTM, BLOCK_SLSTM,

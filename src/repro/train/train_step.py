@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.sharding import ShardingCtx, ShardingRules
+from repro.core.sharding import ShardingRules
 
 
 def global_norm(tree) -> jax.Array:
@@ -67,11 +67,6 @@ def zero1_state_shardings(opt_state, param_axes, mesh: Mesh,
     take the param sharding PLUS 'data' on the first dim that is unsharded
     and divisible — gradients then arrive by reduce-scatter and the updated
     params leave by all-gather."""
-    data_extent = 1
-    for a in ("pod", "data"):
-        if a in mesh.axis_names:
-            data_extent *= mesh.shape[a]
-
     def one(s, axes):
         if getattr(s, "ndim", 0) == 0:
             return NamedSharding(mesh, P())

@@ -15,6 +15,24 @@ import jax
 from repro.checkpoint import ckpt as ckpt_lib
 
 
+def _batch_items(batch) -> tuple:
+    """(count, unit) of work in one batch for throughput accounting.
+
+    LM/VLM batches carry a ``tokens`` (or codebook-label) tensor and report
+    tok/s; the paper's own vision/ASR workloads (vgg-a, overfeat-fast,
+    cd-dnn) have no token tensor — count batch rows and report samples/s
+    instead of a flat 0 tok/s."""
+    if "tokens" in batch:
+        return int(batch["tokens"].size), "tok"
+    if "codebook_labels" in batch:            # audio LM: seq x codebooks
+        return int(batch["codebook_labels"].size), "tok"
+    for v in batch.values():
+        shape = getattr(v, "shape", ())
+        if shape:
+            return int(shape[0]), "samples"
+    return 0, "samples"
+
+
 @dataclass
 class TrainerConfig:
     total_steps: int = 100
@@ -33,21 +51,21 @@ class Trainer:
         history = []
         step_fn = jax.jit(self.train_step, donate_argnums=(0, 1))
         t0 = time.perf_counter()
-        tokens_seen = 0
+        items_seen, unit = 0, "tok"
         for step in range(start_step, self.cfg.total_steps):
             batch = next(data_iter)
             params, opt_state, metrics = step_fn(params, opt_state,
                                                  step, batch)
-            if "tokens" in batch:
-                tokens_seen += int(batch["tokens"].size)
+            n, unit = _batch_items(batch)
+            items_seen += n
             if (step + 1) % self.cfg.log_every == 0 or step == start_step:
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
-                rate = tokens_seen / dt if dt > 0 else 0.0
+                rate = items_seen / dt if dt > 0 else 0.0
                 log_fn(f"step {step + 1:5d}  loss {loss:8.4f}  "
                        f"gnorm {float(metrics['grad_norm']):7.3f}  "
                        f"lr {float(metrics['lr']):.2e}  "
-                       f"{rate:9.0f} tok/s")
+                       f"{rate:9.0f} {unit}/s")
                 history.append(dict(step=step + 1, loss=loss,
                                     grad_norm=float(metrics["grad_norm"])))
             if (self.cfg.ckpt_every and self.cfg.ckpt_dir

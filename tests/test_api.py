@@ -1,0 +1,205 @@
+"""Tests for the declarative run-assembly layer (repro.api).
+
+The in-process tests run on the single real CPU device (meshes degrade to
+(1, 1)); the multi-device equivalence tests reuse the subprocess machinery
+of test_distributed.py so the rest of the suite keeps one device."""
+import dataclasses
+
+import pytest
+
+from test_distributed import run_py
+
+
+# ---------------------------------------------------------------------------
+# RunSpec validation + family registry (no jax compute)
+# ---------------------------------------------------------------------------
+def test_runspec_validates_fields():
+    from repro.api import RunSpec
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", parallel="async")
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", optimizer="lars")
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", schedule="linear")
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", steps=0)
+    with pytest.raises(ValueError):
+        # comm knobs only drive the explicit bucketed zero1 path; setting
+        # them on dp/serial would be silently ignored, so it's rejected
+        from repro.comm import CommConfig
+        RunSpec(arch="vgg-a", parallel="dp", comm=CommConfig())
+    spec = RunSpec(arch="vgg-a")
+    assert dataclasses.replace(spec, parallel="zero1").parallel == "zero1"
+
+
+def test_meshspec_axes():
+    from repro.api import MeshSpec
+    assert MeshSpec().axis_names == ("data", "model")
+    assert MeshSpec(pods=2).axis_names == ("pod", "data", "model")
+    assert MeshSpec(pods=2).data_axes == ("pod", "data")
+    assert MeshSpec().data_axes == ("data",)
+
+
+def test_family_registry_resolves_all_config_types():
+    from repro.api import adapter_for, families
+    from repro.configs import get_config
+    assert set(families()) == {"cnn", "dnn", "transformer"}
+    assert adapter_for(get_config("vgg-a")).family == "cnn"
+    assert adapter_for(get_config("cd-dnn")).family == "dnn"
+    assert adapter_for(get_config("llama3-8b")).family == "transformer"
+    with pytest.raises(TypeError):
+        adapter_for(object())
+
+
+def test_register_family_override_wins():
+    from repro.api import adapter_for, register_family
+    from repro.api.families import CNN_FAMILY
+    from repro.configs import get_config
+    cfg = get_config("vgg-a")
+    custom = dataclasses.replace(CNN_FAMILY, family="cnn-custom")
+    register_family(custom)
+    try:
+        assert adapter_for(cfg).family == "cnn-custom"
+    finally:
+        register_family(CNN_FAMILY)
+    assert adapter_for(cfg).family == "cnn"
+
+
+def test_smoke_and_stream_delegate_to_adapters():
+    """configs.smoke_variant / data.stream_for route through the registry
+    (the isinstance ladders are gone) and keep their old behavior."""
+    import numpy as np
+    from repro.configs import get_config, smoke_variant
+    from repro.data import stream_for
+    cnn_smoke = smoke_variant(get_config("vgg-a"))
+    assert cnn_smoke.name == "vgg-a-smoke" and cnn_smoke.image_size == 32
+    dnn_smoke = smoke_variant(get_config("cd-dnn"))
+    assert dnn_smoke.hidden_dim == 64
+    lm_smoke = smoke_variant(get_config("llama3-8b"))
+    assert lm_smoke.d_model <= 256
+    b = next(stream_for(cnn_smoke, 4, 0))
+    assert b["images"].shape == (4, 32, 32, 3)
+    b = next(stream_for(lm_smoke, 2, 16))
+    assert b["tokens"].shape == (2, 16)
+    assert b["tokens"].dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# throughput accounting (satellite: CNN/DNN runs reported 0 tok/s)
+# ---------------------------------------------------------------------------
+def test_trainer_counts_samples_for_vision_batches():
+    import numpy as np
+    from repro.train.trainer import _batch_items
+    n, unit = _batch_items({"tokens": np.zeros((4, 16))})
+    assert (n, unit) == (64, "tok")
+    n, unit = _batch_items({"images": np.zeros((8, 32, 32, 3)),
+                            "labels": np.zeros((8,))})
+    assert (n, unit) == (8, "samples")
+    n, unit = _batch_items({"frames": np.zeros((5, 40)),
+                            "senones": np.zeros((5,))})
+    assert (n, unit) == (5, "samples")
+    n, unit = _batch_items({"codebook_labels": np.zeros((2, 8, 4)),
+                            "frame_embeds": np.zeros((2, 8, 16))})
+    assert (n, unit) == (64, "tok")
+
+
+# ---------------------------------------------------------------------------
+# compile matrix: every arch x every parallel mode assembles
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("parallel", ["serial", "dp", "zero1"])
+def test_compile_run_matrix(parallel):
+    import jax
+    from repro.api import RunSpec, compile_run
+    from repro.configs import ALL_ARCHS
+    for arch in ALL_ARCHS:
+        spec = RunSpec(arch=arch, smoke=True, parallel=parallel,
+                       steps=2, batch=2, seq=32)
+        run = compile_run(spec)
+        assert callable(run.train_step), arch
+        assert jax.tree.leaves(run.params), arch
+        assert run.family.family in ("cnn", "dnn", "transformer")
+        if parallel == "serial":
+            assert run.mesh is None
+        else:
+            assert "data" in run.mesh.axis_names
+        # opt_state materialized (zero1: strip-sharded fusion buffers)
+        assert jax.tree.leaves(run.opt_state) is not None
+        run.close()
+
+
+def test_compile_run_one_train_step_per_family():
+    """One real step through the compiled Run for each family (serial)."""
+    from repro.api import RunSpec, compile_run
+    for arch in ("vgg-a", "cd-dnn", "llama-100m"):
+        run = compile_run(RunSpec(arch=arch, smoke=True, steps=2, batch=2,
+                                  seq=32, log_every=1))
+        metrics = run.step(next(run.data))
+        assert float(metrics["loss"]) > 0, arch
+        run.close()
+
+
+# ---------------------------------------------------------------------------
+# multi-device equivalence: RunSpec(zero1) == RunSpec(serial) to float tol
+# ---------------------------------------------------------------------------
+def test_api_zero1_matches_serial_vgg():
+    """The compiled zero1 step (explicit bucketed §3.4 strips over an
+    8-way data mesh) reproduces the serial run's params to float
+    tolerance — the acceptance property for the api layer."""
+    run_py("""
+        import numpy as np, jax
+        from repro.api import RunSpec, compile_run
+        from repro.comm import CommConfig
+        quiet = lambda *_: None
+        base = RunSpec(arch="vgg-a", smoke=True, steps=3, batch=8, lr=5e-3,
+                       schedule="constant", log_every=100, seed=0)
+        rs = compile_run(base)
+        hs = rs.fit(log_fn=quiet); rs.close()
+        for comm in (None, CommConfig(bucket_bytes=1 << 14),
+                     CommConfig(bucket_bytes=1 << 25)):
+            rz = compile_run(base.replace(parallel="zero1", comm=comm))
+            assert rz.mesh.shape["data"] == 8
+            hz = rz.fit(log_fn=quiet); rz.close()
+            np.testing.assert_allclose(hz[-1]["loss"], hs[-1]["loss"],
+                                       rtol=1e-5)
+            for a, b in zip(jax.tree.leaves(rs.params),
+                            jax.tree.leaves(rz.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-4, atol=1e-6)
+        print("OK")
+    """)
+
+
+def test_api_zero1_hierarchical_and_gspmd_match_serial_lm():
+    """Transformer family: the pods=2 hierarchical zero1 run and the
+    GSPMD zero1 run both reproduce serial training."""
+    run_py("""
+        import numpy as np, jax
+        from repro.api import RunSpec, MeshSpec, compile_run
+        from repro.comm import CommConfig
+        quiet = lambda *_: None
+        # momentum SGD: linear in the gradients, so float-level gradient
+        # noise stays float-level in the params (AdamW's m/sqrt(v) turns
+        # noise-level grads of unused vocab rows into +-lr sign flips)
+        base = RunSpec(arch="llama3-8b", smoke=True, steps=2, batch=8,
+                       seq=16, lr=1e-3, optimizer="sgd",
+                       schedule="constant", log_every=100)
+        rs = compile_run(base)
+        hs = rs.fit(log_fn=quiet); rs.close()
+        variants = [
+            base.replace(parallel="zero1", mesh=MeshSpec(pods=2),
+                         comm=CommConfig(bucket_bytes=1 << 16,
+                                         hierarchical=True)),
+            base.replace(parallel="zero1-gspmd"),
+        ]
+        for spec in variants:
+            rv = compile_run(spec)
+            hv = rv.fit(log_fn=quiet); rv.close()
+            np.testing.assert_allclose(hv[-1]["loss"], hs[-1]["loss"],
+                                       rtol=2e-3, err_msg=spec.parallel)
+            for a, b in zip(jax.tree.leaves(rs.params),
+                            jax.tree.leaves(rv.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-3, atol=1e-5,
+                                           err_msg=spec.parallel)
+        print("OK")
+    """)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.configs import (
     get_config, smoke_variant, ASSIGNED_ARCHS, PAPER_ARCHS,
 )
-from repro.configs.base import CNNConfig, DNNConfig
+from repro.configs.base import CNNConfig
 from repro.core.sharding import ShardingCtx
 from repro.models import cnn, dnn, frontends, transformer
 from repro.optim import AdamW

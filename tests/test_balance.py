@@ -2,7 +2,6 @@
 
 Each test pins an equation to either its closed form, a long-form
 re-derivation, or the paper's own reported numbers."""
-import math
 
 import pytest
 from _hypothesis_compat import given, settings, st

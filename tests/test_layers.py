@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref

@@ -1,6 +1,5 @@
 """MoE routing/dispatch tests."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

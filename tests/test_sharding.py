@@ -1,20 +1,16 @@
 """Sharding rules resolver + hybrid planner tests (no multi-device needed —
 the resolver is pure metadata against an abstract mesh)."""
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-import jax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, INPUT_SHAPES, TPU_V5E, ASSIGNED_ARCHS
 from repro.core import hybrid
-from repro.core.sharding import ShardingRules, DEFAULT_RULES
+from repro.core.sharding import ShardingRules
 
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
-    devs = np.empty(shape, dtype=object)
-    it = np.nditer(devs, flags=["multi_index", "refs_ok"])
     # AbstractMesh avoids needing real devices
     from jax.sharding import AbstractMesh
     return AbstractMesh(shape, axes)

@@ -1,5 +1,4 @@
 """End-to-end behaviour tests for the reproduction framework."""
-import os
 import tempfile
 
 import numpy as np
