@@ -12,25 +12,36 @@ composition on the same tree.
 Collective counts come from the REAL planner (repro.comm.plan_buckets over
 the actual weight-tensor shapes), so they match what the bucketed
 ``make_distributed_update`` would issue; only the times are model-predicted.
+
+The ``overlap_*`` rows report the predicted EXPOSED communication per step:
+with the monolithic schedule every transfer is exposed (overlap off), while
+the §3.1 bubble schedule (``CommConfig.overlap`` / ``--overlap``) hides each
+bucket's reduce under the backprop remaining below its trigger layer —
+``core.balance.bucket_bubble_schedule`` over the same real plan, with the
+bucket→layer readiness metadata of ``repro.comm.overlap``.
 """
 from __future__ import annotations
 
 import math
+import re
 
 import jax
 
 from repro.comm.bucketer import plan_buckets
+from repro.comm.overlap import exposed_comm
 from repro.configs import (
     get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
 )
 from repro.core.balance import (
-    SIZE_F32, bucketed_allreduce_time, collective_count,
-    hierarchical_allreduce_time, optimal_bucket_bytes,
+    SIZE_F32, bucketed_allreduce_time, collective_count, conv_comp_flops,
+    fc_comp_flops, hierarchical_allreduce_time, optimal_bucket_bytes,
+    ring_collective_time,
 )
 
 MIB = 2**20
 SWEEP_MIB = (0.25, 1.0, 4.0, 16.0, 32.0)
 G = 64           # the paper's 256-minibatch / 4-per-node operating point
+MB_NODE = 4      # data points per node at that operating point
 G_PODS, G_IN = 8, 16   # two-level composition of 128 nodes
 
 
@@ -38,10 +49,33 @@ def grad_tree(net: str):
     """Weight + bias leaves of a paper CNN — the family adapter's param
     specs, i.e. exactly the tree (and tree order) the real bucketed
     ``make_distributed_update`` plans over.  ``core.params.Spec`` is
-    shape-only, so plan_buckets runs without materializing VGG-A."""
+    shape-only, so plan_buckets runs without materializing VGG-A.
+    Returns (leaves, leaf_layer): per flat leaf, the forward layer index it
+    belongs to (parsed from the spec names, e.g. ``conv3_w`` -> 3) — the
+    readiness metadata the §3.1 overlap schedule needs."""
     from repro.api import adapter_for
     cfg = get_config(net)
-    return jax.tree.leaves(adapter_for(cfg).param_specs(cfg))
+    flat = jax.tree_util.tree_flatten_with_path(
+        adapter_for(cfg).param_specs(cfg))[0]
+    leaves = [leaf for _, leaf in flat]
+    leaf_layer = [int(re.search(r"\d+", jax.tree_util.keystr(p)).group())
+                  for p, _ in flat]
+    return leaves, leaf_layer
+
+
+def layer_comps(net: str):
+    """Per forward layer, FLOPs per node per iteration (3 passes) at the
+    G=64 operating point; pool layers contribute ~0."""
+    cfg = get_config(net)
+    comps = []
+    for lyr in cfg.layers:
+        if lyr.kind == "conv":
+            comps.append(conv_comp_flops(lyr, MB_NODE))
+        elif lyr.kind == "fc":
+            comps.append(fc_comp_flops(lyr.ifm, lyr.ofm, MB_NODE))
+        else:
+            comps.append(0.0)
+    return comps
 
 
 def _size(leaf) -> int:
@@ -51,15 +85,16 @@ def _size(leaf) -> int:
 def rows():
     out = []
     for net in ("vgg-a", "overfeat-fast"):
-        leaves = grad_tree(net)
-        total = sum(_size(l) for l in leaves) * SIZE_F32
+        leaves, leaf_layer = grad_tree(net)
+        comps = layer_comps(net)
+        total = sum(_size(lyr) for lyr in leaves) * SIZE_F32
         n_tensors = len(leaves)
         out.append((f"comm/{net}/n_tensors", n_tensors, ""))
         out.append((f"comm/{net}/grad_MiB", total / MIB, ""))
         # the serialization granularity of each schedule is its largest
         # single message: the biggest tensor for per-tensor, the biggest
         # fusion buffer for bucketed plans
-        max_leaf = max(_size(l) for l in leaves) * SIZE_F32
+        max_leaf = max(_size(lyr) for lyr in leaves) * SIZE_F32
         for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
             # per-tensor baseline: the seed schedule's collective count
             t0 = bucketed_allreduce_time(total, n_tensors, 0, G, hw,
@@ -80,6 +115,18 @@ def rows():
                                             fill_bytes=fill)
                 out.append((f"comm/{net}/{tag}/bucket_{mib}MiB_ms", t * 1e3,
                             f"n_coll={plan.n_collectives};model={n_model}"))
+                # §3.1 overlap: exposed-comm with the bubble schedule over
+                # the SAME real plan vs. the monolithic (all-exposed) path
+                comm_times = [ring_collective_time(
+                    b.padded_size * SIZE_F32, G, hw) for b in plan.buckets]
+                off, on, _ = exposed_comm(plan, comm_times, comps, hw,
+                                          leaf_layer=leaf_layer,
+                                          efficiency=0.75)
+                hidden = 100.0 * (1.0 - on / off) if off > 0 else 0.0
+                out.append((
+                    f"comm/{net}/{tag}/overlap_{mib}MiB_exposed_ms",
+                    on * 1e3,
+                    f"off={off * 1e3:.3f}ms;hidden={hidden:.0f}%"))
             # closed-form optimum (splittable-tensor model — the planner
             # rows above carry the real unsplittable-tensor counts)
             b_star = optimal_bucket_bytes(total, G, hw)

@@ -56,9 +56,9 @@ def analytic_rows():
              ("overfeat-fast", "score"): 315.0}
     for net in ("vgg-a", "overfeat-fast"):
         cfg = get_config(net)
-        conv = sum(balance.conv_comp_flops(l, 1) for l in cfg.conv_layers())
-        fc = sum(balance.fc_comp_flops(l.ifm, l.ofm, 1)
-                 for l in cfg.fc_layers())
+        conv = sum(balance.conv_comp_flops(lyr, 1) for lyr in cfg.conv_layers())
+        fc = sum(balance.fc_comp_flops(lyr.ifm, lyr.ofm, 1)
+                 for lyr in cfg.fc_layers())
         full = conv + fc                      # 3 passes (train)
         score = full / 3.0                    # forward only
         # paper-reported single-node efficiencies: ~90% conv, 70% FC

@@ -41,8 +41,8 @@ def train_curve(num_nodes: int, seed: int = 0):
         loss_sum, grads = 0.0, None
         for i in range(num_nodes):   # synchronous nodes: grads averaged
             sub = jax.tree.map(lambda t: t[i * shard:(i + 1) * shard], batch)
-            l, g = grad_on(params, sub)
-            loss_sum += float(l) / num_nodes
+            lv, g = grad_on(params, sub)
+            loss_sum += float(lv) / num_nodes
             grads = g if grads is None else jax.tree.map(
                 lambda a, b: a + b, grads, g)
         grads = jax.tree.map(lambda g: g / num_nodes, grads)

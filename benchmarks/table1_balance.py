@@ -40,12 +40,12 @@ def rows():
         r = balance.aggregate_comp_comm_ratio(cfg.conv_layers())
         out.append((f"table1/comp_comm_ratio_{net}", r,
                     PAPER[("ratio", net)]))
-        layers = [LayerBalance(str(i), conv_comp_flops(l, 1),
-                               data_parallel_comm_bytes(l))
-                  for i, l in enumerate(cfg.conv_layers())]
+        layers = [LayerBalance(str(i), conv_comp_flops(lyr, 1),
+                               data_parallel_comm_bytes(lyr))
+                  for i, lyr in enumerate(cfg.conv_layers())]
         grad_bytes = SIZE_F32 * sum(
-            l.ifm * l.ofm * max(l.kernel, 1) ** 2
-            for l in cfg.layers if l.kind in ("conv", "fc"))
+            lyr.ifm * lyr.ofm * max(lyr.kernel, 1) ** 2
+            for lyr in cfg.layers if lyr.kind in ("conv", "fc"))
         for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
             n = max_data_parallel_nodes(layers, hw, 256)
             min_pts = max(1, math.ceil(256 / max(n, 1)))

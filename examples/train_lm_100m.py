@@ -14,7 +14,7 @@ import os
 import jax
 
 from repro.api import RunSpec, compile_run
-from repro.checkpoint import latest_step, restore, save
+from repro.checkpoint import save
 
 
 def main(argv=None):
@@ -36,20 +36,36 @@ def main(argv=None):
     print(f"training {run.cfg.name}: {n / 1e6:.1f}M params, "
           f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
 
-    start = 0
-    if (s := latest_step(args.ckpt_dir)):
-        out, start = restore(args.ckpt_dir, s, params=run.params,
-                             opt_state=run.opt_state)
-        run.params, run.opt_state = out["params"], out["opt_state"]
-        print(f"resumed from step {start}")
-
-    hist = run.fit(start_step=start)
+    # Run.fit auto-resumes from the latest ckpt_dir checkpoint: restored
+    # trees land back on the run's shardings and the seeded data stream is
+    # fast-forwarded, so the trajectory continues exactly where it stopped
+    hist = run.fit()
     run.close()
-    save(args.ckpt_dir, args.steps, params=run.params,
-         opt_state=run.opt_state)
+    if not hist:
+        # resumed past --steps (or the source ran dry before any log):
+        # nothing trained, so don't stamp a new checkpoint at args.steps
+        # or clobber the recorded loss history with an empty file
+        print("nothing to train; checkpoint and history left as-is")
+        return hist
+    if hist[-1]["step"] == args.steps:
+        # completed: capture the end state (the final step always logs, so
+        # this label is the step the params really reached)
+        save(args.ckpt_dir, args.steps, params=run.params,
+             opt_state=run.opt_state)
+    else:
+        # stopped short (source ran dry): params are AHEAD of the last
+        # logged step — don't overwrite a consistent periodic checkpoint
+        # with a mislabeled one
+        print(f"stopped at step {hist[-1]['step']} < {args.steps}; "
+              "keeping periodic checkpoints only")
     print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
-    with open(os.path.join(args.ckpt_dir, "history.csv"), "w") as f:
-        f.write("step,loss\n")
+    # append on resume: hist only covers steps after the restored
+    # checkpoint, and mode "w" would wipe the pre-kill rows
+    path = os.path.join(args.ckpt_dir, "history.csv")
+    resumed = hist[0]["step"] > 1 and os.path.exists(path)
+    with open(path, "a" if resumed else "w") as f:
+        if not resumed:
+            f.write("step,loss\n")
         for h in hist:
             f.write(f"{h['step']},{h['loss']}\n")
     return hist

@@ -9,13 +9,16 @@ Resolution order:
 3. mesh from the ``MeshSpec`` topology (none for ``serial``), params
    initialized and placed by the logical-axis sharding rules;
 4. parallelism mode -> update path: plain ``optimizer.update`` (serial/dp),
-   the explicit bucketed §3.4 strip update of ``repro.comm`` (``zero1``),
-   or GSPMD-sharded optimizer state (``zero1-gspmd``);
-5. ``make_train_step`` glues loss -> grads -> update into the jit-ready
-   step the returned :class:`~repro.api.run.Run` carries.
+   the explicit bucketed §3.4 strip update of ``repro.comm`` (``zero1`` —
+   monolithic post-grad reduction, or the §3.1 backprop-overlapped bubble
+   schedule when ``CommConfig.overlap`` is set), or GSPMD-sharded optimizer
+   state (``zero1-gspmd``);
+5. ``make_train_step`` (or ``make_overlapped_train_step``) glues loss ->
+   grads -> update into the jit-ready step the returned
+   :class:`~repro.api.run.Run` carries.
 
-ROADMAP follow-ons (backprop overlap, bucket autotuning, async modes,
-multi-backend collectives) plug in at step 4 without touching any launcher.
+ROADMAP follow-ons (bucket autotuning, async modes, multi-backend
+collectives) plug in at step 4 without touching any launcher.
 """
 from __future__ import annotations
 
@@ -33,8 +36,10 @@ from repro.core.params import Spec
 from repro.core.sharding import ShardingCtx, ShardingRules
 from repro.launch.mesh import make_host_mesh
 from repro.optim import AdamW, MomentumSGD, constant, warmup_cosine
-from repro.optim.dist import make_distributed_update
-from repro.train import make_train_step, zero1_state_shardings
+from repro.optim.dist import make_distributed_update, make_overlapped_update
+from repro.train import (
+    make_overlapped_train_step, make_train_step, zero1_state_shardings,
+)
 
 
 def _resolve_config(spec: RunSpec):
@@ -97,13 +102,34 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
     lr_schedule = _make_schedule(spec)
 
     dist_update = None
+    train_step = None
     if spec.parallel == "zero1":
         axes = _data_axes(mesh)
         comm = spec.comm if spec.comm is not None \
             else CommConfig(hierarchical=len(axes) == 2)
-        init_fn, dist_update = make_distributed_update(
-            optimizer, mesh, data_axes=axes, comm=comm)
-        opt_state = init_fn(params)
+        if comm.overlap:
+            # §3.1 bubble schedule: the whole step runs in one shard_map and
+            # each bucket's part-reduce is issued inside the backward pass
+            # (comm hooks), so the loss must be the mesh-free local loss —
+            # GSPMD constraints do not apply inside shard_map
+            if spec.mesh.model_ways > 1:
+                raise ValueError(
+                    "CommConfig.overlap runs the whole step inside a "
+                    "shard_map over the data axes with a mesh-free loss — "
+                    "a model axis would be silently replicated (full "
+                    "redundant compute per model member), so overlap "
+                    "currently requires model_ways == 1 "
+                    f"(got model_ways={spec.mesh.model_ways})")
+            init_fn, local_update = make_overlapped_update(
+                optimizer, mesh, data_axes=axes, comm=comm)
+            opt_state = init_fn(params)
+            train_step = make_overlapped_train_step(
+                family.make_loss(cfg, ShardingCtx()), lr_schedule, mesh,
+                axes, comm, local_update, grad_clip=spec.grad_clip)
+        else:
+            init_fn, dist_update = make_distributed_update(
+                optimizer, mesh, data_axes=axes, comm=comm)
+            opt_state = init_fn(params)
     elif spec.parallel == "zero1-gspmd":
         opt_state = optimizer.init(params)
         st_sh = zero1_state_shardings(opt_state, family.param_axes(cfg),
@@ -112,9 +138,10 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
     else:
         opt_state = optimizer.init(params)
 
-    train_step = make_train_step(loss_fn, optimizer, lr_schedule,
-                                 grad_clip=spec.grad_clip,
-                                 dist_update=dist_update)
+    if train_step is None:
+        train_step = make_train_step(loss_fn, optimizer, lr_schedule,
+                                     grad_clip=spec.grad_clip,
+                                     dist_update=dist_update)
     return Run(spec=spec, cfg=cfg, family=family, mesh=mesh, rules=rules,
                ctx=ctx, loss_fn=loss_fn, optimizer=optimizer,
                lr_schedule=lr_schedule, train_step=train_step,

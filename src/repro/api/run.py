@@ -17,6 +17,7 @@ from typing import Any, Callable, Optional
 import jax
 from jax.sharding import Mesh
 
+from repro.checkpoint import ckpt as ckpt_lib
 from repro.core.sharding import ShardingCtx, ShardingRules
 from repro.data.pipeline import Prefetcher, make_placer
 from repro.train.trainer import Trainer, TrainerConfig
@@ -39,10 +40,28 @@ class Run:
     params: Any
     opt_state: Any
     _data: Optional[Prefetcher] = field(default=None, repr=False)
+    _jit_step: Optional[Callable] = field(default=None, repr=False)
+    _warm: bool = field(default=False, repr=False)  # jit_step executed once
 
     def _mesh_scope(self):
         return (jax.set_mesh(self.mesh) if self.mesh is not None
                 else contextlib.nullcontext())
+
+    def _make_data(self, skip: int = 0) -> Prefetcher:
+        """Fresh prefetcher over the family's seeded stream, with ``skip``
+        batches consumed HOST-side first (raw iterator — no device placement
+        for batches that are immediately discarded; resume at step 100k must
+        not pay 100k device_puts).  A finite stream shorter than ``skip``
+        simply ends — the Prefetcher sentinel then stops the training loop
+        on its first draw."""
+        s = self.spec
+        stream = self.family.stream(self.cfg, s.batch, s.seq, s.seed)
+        for _ in range(skip):
+            try:
+                next(stream)
+            except StopIteration:
+                break
+        return Prefetcher(stream, place=make_placer(self.mesh, self.rules))
 
     @property
     def data(self) -> Prefetcher:
@@ -50,30 +69,82 @@ class Run:
         run's mesh.  Created on first access (so compiling a Run never
         starts threads)."""
         if self._data is None:
-            s = self.spec
-            stream = self.family.stream(self.cfg, s.batch, s.seq, s.seed)
-            self._data = Prefetcher(stream,
-                                    place=make_placer(self.mesh, self.rules))
+            self._data = self._make_data()
         return self._data
+
+    @property
+    def jit_step(self) -> Callable:
+        """THE jitted train step — one compile cache, buffers donated.
+        ``step()`` and ``fit()`` both go through it: jitting per call site
+        (the old ``step`` re-wrapped without ``donate_argnums``) built two
+        compile caches and kept an undonated copy of the params alive,
+        doubling peak param memory when mixing the two."""
+        if self._jit_step is None:
+            self._jit_step = jax.jit(self.train_step, donate_argnums=(0, 1))
+        return self._jit_step
 
     def step(self, batch, step_idx: int = 0):
         """Run one (jit) train step on an explicit batch; advances the run's
         params/opt_state and returns the metrics dict."""
         with self._mesh_scope():
-            self.params, self.opt_state, metrics = jax.jit(self.train_step)(
+            self.params, self.opt_state, metrics = self.jit_step(
                 self.params, self.opt_state, step_idx, batch)
+        self._warm = True
         return metrics
 
-    def fit(self, start_step: int = 0, log_fn=print):
-        """Train for ``spec.steps`` steps; returns the metrics history."""
+    def restore(self, step: int):
+        """Load checkpoint ``step`` from ``spec.ckpt_dir`` and place the
+        restored trees back onto this run's shardings (zero1 strip
+        opt_state lands on its data-axis strips, not unplaced on device 0)."""
+        trees, _ = ckpt_lib.restore(self.spec.ckpt_dir, step,
+                                    params=self.params,
+                                    opt_state=self.opt_state)
+        placed = jax.tree.map(
+            lambda cur, new: jax.device_put(new, cur.sharding),
+            {"params": self.params, "opt_state": self.opt_state}, trees)
+        self.params, self.opt_state = placed["params"], placed["opt_state"]
+
+    def fit(self, start_step: Optional[int] = None, log_fn=print):
+        """Train for ``spec.steps`` steps; returns the metrics history.
+
+        ``start_step=None`` (the default) resumes from the latest checkpoint
+        in ``spec.ckpt_dir`` when one exists — params and opt_state are
+        restored onto the run's shardings and the (deterministic, seeded)
+        data stream is fast-forwarded one batch per completed step so the
+        trajectory continues exactly where the interrupted run left off.
+        Pass ``start_step=0`` to force a fresh run."""
         s = self.spec
+        if start_step is None:
+            start_step = 0
+            if s.ckpt_dir:
+                latest = ckpt_lib.latest_step(s.ckpt_dir)
+                if latest is not None:
+                    self.restore(latest)
+                    start_step = latest
+                    log_fn(f"resuming from checkpoint step {latest} "
+                           f"({s.ckpt_dir})")
+                    if latest < s.steps:
+                        # re-align the data stream: drop any cached
+                        # (already advanced) prefetcher and rebuild with
+                        # one host-side skip per completed step
+                        self.close()
+                        self._data = self._make_data(skip=latest)
+        if start_step >= s.steps:
+            # nothing to train (checkpoint at or past --steps): don't spin
+            # up the prefetch thread / device-place batches for a no-op
+            return []
         tcfg = TrainerConfig(total_steps=s.steps, log_every=s.log_every,
                              ckpt_every=s.ckpt_every, ckpt_dir=s.ckpt_dir)
-        trainer = Trainer(self.train_step, tcfg)
+        trainer = Trainer(self.jit_step, tcfg, jit=False, warm=self._warm)
         with self._mesh_scope():
             self.params, self.opt_state, history = trainer.fit(
                 self.params, self.opt_state, self.data,
                 start_step=start_step, log_fn=log_fn)
+        if history:
+            # the first executed step always logs, so non-empty history ==
+            # jit_step has really run (a source that dies before step one
+            # must NOT mark the cache warm)
+            self._warm = True
         return history
 
     def close(self):

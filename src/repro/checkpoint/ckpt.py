@@ -58,16 +58,35 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, step: int, **templates) -> Tuple[Dict[str, Any], int]:
-    """templates: name=pytree-with-matching-structure.  Returns (trees, step)."""
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    """templates: name=pytree-with-matching-structure.  Returns (trees, step).
+
+    Raises real exceptions — ``FileNotFoundError`` for a missing checkpoint,
+    ``KeyError`` for a leaf absent from the archive (tree structure changed
+    since save), ``ValueError`` on shape or dtype mismatch.  ``assert`` is
+    not used: shape checks must survive ``python -O``."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no checkpoint at {path}")
+    data = np.load(path)
     out = {}
     for name, template in templates.items():
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
-        for path, leaf in flat:
-            k = f"{name}:{_key_str(path)}"
-            arr = jnp.asarray(data[k])
-            assert arr.shape == leaf.shape, (k, arr.shape, leaf.shape)
-            leaves.append(arr)
+        for leaf_path, leaf in flat:
+            k = f"{name}:{_key_str(leaf_path)}"
+            if k not in data.files:
+                raise KeyError(
+                    f"checkpoint {path} has no leaf {k!r} — was the tree "
+                    f"structure changed since the save?")
+            arr = data[k]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"checkpoint leaf {k!r} has shape {tuple(arr.shape)}, "
+                    f"template expects {tuple(leaf.shape)}")
+            if np.dtype(arr.dtype) != np.dtype(leaf.dtype):
+                raise ValueError(
+                    f"checkpoint leaf {k!r} has dtype {np.dtype(arr.dtype)}, "
+                    f"template expects {np.dtype(leaf.dtype)}")
+            leaves.append(jnp.asarray(arr))
         out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
     return out, step

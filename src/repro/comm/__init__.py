@@ -33,17 +33,29 @@ knobs, all carried by :class:`~repro.comm.bucketer.CommConfig`:
     one flat ring that spans pods — and the cross-pod stage always
     accumulates in fp32 even when the in-pod wire dtype is bf16.
 
+``overlap`` (paper §3.1, the bubble schedule)
+    Issue each bucket's part-reduce INSIDE the backward pass — at the point
+    where the bucket's last contributing leaf gradient materializes — via
+    ``jax.custom_vjp`` comm hooks, instead of reducing the whole tree after
+    ``value_and_grad`` returns.  Only each transfer's "bubble" (the §3.1
+    closed form, ``core.balance.bucket_bubble_schedule``) stays exposed.
+
 Layout: :mod:`repro.comm.bucketer` owns the static bucket plan and the
 pack/unpack of leaves into fusion buffers; :mod:`repro.comm.schedule` owns
 the collective schedules (flat and hierarchical) that run inside
-``jax.shard_map``.  ``optim.dist.make_distributed_update`` and the explicit
-ZeRO-1 train step (``train.train_step.make_train_step(dist_update=...)``)
-are the consumers.
+``jax.shard_map``; :mod:`repro.comm.overlap` owns the backprop-overlap
+hooks and the bucket→layer readiness metadata.  The consumers are
+``optim.dist.make_distributed_update`` / ``make_overlapped_update`` and the
+explicit ZeRO-1 train steps (``train.make_train_step(dist_update=...)`` and
+``train.make_overlapped_train_step``).
 """
 from repro.comm.bucketer import (  # noqa: F401
     Bucket, BucketPlan, CommConfig, LeafSlot, pack_bucket, plan_buckets,
     unpack_buckets,
 )
+from repro.comm.overlap import (  # noqa: F401
+    bucket_triggers, exposed_comm, issue_order, make_overlap_grad,
+)
 from repro.comm.schedule import (  # noqa: F401
-    FlatSchedule, HierarchicalSchedule, make_schedule,
+    FlatSchedule, HierarchicalSchedule, group_axes, make_schedule,
 )

@@ -35,10 +35,16 @@ class CommConfig:
                    ``"bfloat16"``.  fp32 accumulate after every stage.
     hierarchical:  use the two-level in-pod + cross-pod schedule when the
                    data axes are a 2-tuple like ``("pod", "data")``.
+    overlap:       issue each bucket's part-reduce inside the BACKWARD pass,
+                   the moment the bucket's last contributing leaf gradient
+                   materializes (the paper's §3.1 bubble schedule), instead
+                   of reducing the whole tree after ``value_and_grad``
+                   returns.  See :mod:`repro.comm.overlap`.
     """
     bucket_bytes: int = 4 * 2**20
     reduce_dtype: str = "float32"
     hierarchical: bool = False
+    overlap: bool = False
 
     def __post_init__(self):
         assert self.reduce_dtype in ("float32", "bfloat16"), (
@@ -67,6 +73,14 @@ class Bucket:
     size: int                  # payload elements (sum of slot sizes)
     padded_size: int           # size rounded up to a multiple of the group
 
+    @property
+    def trigger_index(self) -> int:
+        """The leaf (flat tree index) whose gradient completes this bucket.
+        Backprop materializes leaf gradients in REVERSE tree order (the last
+        layer's weight gradient first), so the bucket becomes reducible when
+        its EARLIEST tree-order leaf — the latest in backprop — arrives."""
+        return min(s.index for s in self.slots)
+
 
 @dataclass(frozen=True)
 class BucketPlan:
@@ -79,6 +93,18 @@ class BucketPlan:
         """Collective pairs per step — the quantity bucketing shrinks from
         O(#tensors) to O(total_bytes / bucket_bytes)."""
         return len(self.buckets)
+
+    @property
+    def backprop_order(self) -> Tuple[int, ...]:
+        """Bucket indices in backprop readiness order — the order the §3.1
+        overlap schedule issues the part-reduces.  Descending trigger leaf:
+        the bucket holding the LAST tree-order (= first materialized) leaves
+        is ready first.  Ties (one leaf feeding two per-tensor buckets can't
+        happen, but equal triggers under a custom leaf order can) break
+        toward the later bucket — the one ordering rule, defined in
+        ``core.balance.issue_order``."""
+        from repro.core.balance import issue_order
+        return issue_order(tuple(b.trigger_index for b in self.buckets))
 
     @property
     def total_elements(self) -> int:

@@ -30,10 +30,25 @@ from typing import Tuple, Union
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import Mesh
 
 from repro.core.collectives import (
     AxisNames, axis_size, part_broadcast, part_reduce,
 )
+
+
+def group_axes(mesh: Mesh, data_axes) -> Tuple[Tuple[str, ...], AxisNames, int]:
+    """(axes, axis_arg, G) for the data-parallel group actually present on
+    ``mesh``: requested axes filtered to the mesh, the single-name-or-tuple
+    form the collectives take, and the group size.  The one derivation every
+    consumer of a schedule (update builders, the overlapped train step) must
+    agree on."""
+    axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    axis_arg = axes if len(axes) > 1 else axes[0]
+    G = 1
+    for a in axes:
+        G *= mesh.shape[a]
+    return axes, axis_arg, G
 
 
 def _flat_index(axis_names: AxisNames) -> jax.Array:

@@ -184,10 +184,10 @@ class CNNConfig:
     family: str = "cnn"
 
     def conv_layers(self):
-        return [l for l in self.layers if l.kind == "conv"]
+        return [lyr for lyr in self.layers if lyr.kind == "conv"]
 
     def fc_layers(self):
-        return [l for l in self.layers if l.kind == "fc"]
+        return [lyr for lyr in self.layers if lyr.kind == "fc"]
 
 
 @dataclass(frozen=True)

@@ -27,10 +27,11 @@ SIZE_F32 = 4
 # ---------------------------------------------------------------------------
 # §3.1 data parallelism — per-layer comp and comm
 # ---------------------------------------------------------------------------
-def conv_comp_flops(l: ConvLayerSpec, mb_node: int) -> float:
+def conv_comp_flops(lyr: ConvLayerSpec, mb_node: int) -> float:
     """Paper §3.1: Comp = 3*2*MB_node*ifm*ofm*k_w*k_h*out_w*out_h
     (forward + backprop + weight-gradient, each 2*MACs)."""
-    return 3.0 * 2.0 * mb_node * l.ifm * l.ofm * l.kernel * l.kernel * l.out_hw * l.out_hw
+    return (3.0 * 2.0 * mb_node * lyr.ifm * lyr.ofm * lyr.kernel
+            * lyr.kernel * lyr.out_hw * lyr.out_hw)
 
 
 def fc_comp_flops(ifm: int, ofm: int, mb_node: int) -> float:
@@ -38,19 +39,19 @@ def fc_comp_flops(ifm: int, ofm: int, mb_node: int) -> float:
     return 3.0 * 2.0 * mb_node * ifm * ofm
 
 
-def data_parallel_comm_bytes(l: ConvLayerSpec, overlap: float = 1.0,
+def data_parallel_comm_bytes(lyr: ConvLayerSpec, overlap: float = 1.0,
                              size_data: int = SIZE_F32) -> float:
     """Paper §3.1: Comm = size_data*ifm*ofm*k_w*k_h*(2-overlap).
     (send partial weight gradients + receive updated weights; overlap=1
     means sends/receives fully overlap each other.)"""
-    k = max(l.kernel, 1)
-    return size_data * l.ifm * l.ofm * k * k * (2.0 - overlap)
+    k = max(lyr.kernel, 1)
+    return size_data * lyr.ifm * lyr.ofm * k * k * (2.0 - overlap)
 
 
-def data_parallel_comp_comm_ratio(l: ConvLayerSpec, mb_node: int) -> float:
+def data_parallel_comp_comm_ratio(lyr: ConvLayerSpec, mb_node: int) -> float:
     """Paper §3.1 closed form: comp_comm = 1.5*out_w*out_h*MB_node
     (FP32, overlap=1).  Independent of kernel size, ifm, ofm, stride."""
-    return 1.5 * l.out_hw * l.out_hw * mb_node
+    return 1.5 * lyr.out_hw * lyr.out_hw * mb_node
 
 
 def aggregate_comp_comm_ratio(layers: Sequence[ConvLayerSpec],
@@ -58,8 +59,8 @@ def aggregate_comp_comm_ratio(layers: Sequence[ConvLayerSpec],
     """Network-level comp-to-comm for the data-parallel regime: total conv
     FLOPs per node / total gradient+weight bytes.  The paper quotes 208 for
     OverFeat-FAST and 1456 for VGG-A conv layers."""
-    comp = sum(conv_comp_flops(l, mb_node) for l in layers)
-    comm = sum(data_parallel_comm_bytes(l, overlap) for l in layers)
+    comp = sum(conv_comp_flops(lyr, mb_node) for lyr in layers)
+    comm = sum(data_parallel_comm_bytes(lyr, overlap) for lyr in layers)
     return comp / comm
 
 
@@ -88,10 +89,100 @@ def bubble_schedule(layers: Sequence[LayerBalance], hw: HardwareConfig,
     comp_sys = hw.peak_flops * efficiency
     bubbles = []
     for i, li in enumerate(layers):
-        ocomp = sum(l.comp for l in layers[:i]) + li.comp / 3.0
-        ocomms = sum(l.comm for l in layers[: i + 1])
+        ocomp = sum(lyr.comp for lyr in layers[:i]) + li.comp / 3.0
+        ocomms = sum(lyr.comm for lyr in layers[: i + 1])
         bubbles.append(ocomms / hw.link_bw - ocomp / comp_sys)
     return bubbles
+
+
+def issue_order(triggers: Sequence[int]) -> Tuple[int, ...]:
+    """Bucket indices in backprop issue order — THE ordering rule of the
+    §3.1 overlap schedule, defined once: descending trigger layer (a bucket
+    completed by a later layer is ready earlier in backprop), ties toward
+    the later tree-order bucket.  ``repro.comm`` (``overlap.issue_order``,
+    ``BucketPlan.backprop_order``) and the closed forms below all delegate
+    here, so the analytic model can never drift from the executable
+    schedule."""
+    return tuple(sorted(range(len(triggers)),
+                        key=lambda b: (triggers[b], b), reverse=True))
+
+
+def bucket_bubble_schedule(comm_times: Sequence[float],
+                           triggers: Sequence[int],
+                           layer_comps: Sequence[float],
+                           hw: HardwareConfig,
+                           efficiency: float = 1.0) -> List[float]:
+    """The §3.1 bubble schedule at fusion-BUCKET granularity — the analytic
+    model of ``repro.comm.overlap``'s executable schedule.
+
+    ``comm_times[b]``   seconds of communication for bucket ``b`` (tree
+                        order; e.g. ``ring_collective_time`` of its padded
+                        bytes — the caller picks the comm model).
+    ``triggers[b]``     the forward-order layer whose weight-gradient pass
+                        completes bucket ``b`` (``overlap.bucket_triggers``).
+    ``layer_comps[t]``  FLOPs of layer ``t`` per node per iteration (all
+                        three passes, like ``LayerBalance.comp``).
+
+    Buckets are issued in descending-trigger order (backprop readiness); at
+    bucket ``b``'s issue point the un-overlapped window is its own transfer
+    plus everything issued after it, while the hideable compute is the
+    remaining backprop of layers below the trigger plus the trigger layer's
+    own input-gradient pass (the paper's ``comp/3`` term):
+
+        bubble_b = (comm_b + comms issued after b) / comms_sys
+                 - (sum_{j < trigger_b} comp_j + comp_{trigger_b}/3) / comp_sys
+
+    Returned in bucket (tree) order, seconds, may be negative = fully
+    hidden.  With one bucket per layer this IS ``bubble_schedule`` — the
+    reduction is property-tested in tests/test_comm.py.
+    """
+    comp_sys = hw.peak_flops * efficiency
+    order = issue_order(triggers)
+    total_comm = float(sum(comm_times))
+    bubbles = [0.0] * len(comm_times)
+    issued = 0.0
+    for b in order:
+        t = triggers[b]
+        ocomp = sum(layer_comps[:t]) + layer_comps[t] / 3.0
+        bubbles[b] = (total_comm - issued) - ocomp / comp_sys
+        issued += comm_times[b]
+    return bubbles
+
+
+def overlap_exposed_time(comm_times: Sequence[float],
+                         triggers: Sequence[int],
+                         layer_comps: Sequence[float],
+                         hw: HardwareConfig,
+                         efficiency: float = 1.0) -> float:
+    """Exposed communication (seconds) of the §3.1 overlap schedule, by
+    timeline: buckets transfer on one shared serialized link in issue order
+    (descending trigger), each issued when its trigger layer's weight
+    gradient finishes (the paper computes the weight gradient BEFORE the
+    input-gradient pass to enlarge the window) and due when that layer's
+    NEXT-iteration forward starts.  The step stalls by the worst lateness
+    across buckets — a stall shifts every later deadline, absorbing later
+    lateness — so, unlike summing ``bucket_bubble_schedule`` positives
+    (each bubble re-counts the comm below it), the result is bounded by
+    ``sum(comm_times)``: with zero overlappable compute it IS the
+    monolithic all-exposed time.
+    """
+    comp_sys = hw.peak_flops * efficiency
+    order = issue_order(triggers)
+    t_bp = 2.0 / 3.0 * sum(layer_comps) / comp_sys
+    below = [0.0]                     # prefix sums: sum_{j<t} comp_j
+    for c in layer_comps:
+        below.append(below[-1] + c)
+    link_free = 0.0
+    exposed = 0.0
+    for b in order:
+        t = triggers[b]
+        issue = (2.0 / 3.0 * (below[len(layer_comps)] - below[t + 1])
+                 + layer_comps[t] / 3.0) / comp_sys
+        finish = max(issue, link_free) + comm_times[b]
+        link_free = finish
+        deadline = t_bp + below[t] / 3.0 / comp_sys
+        exposed = max(exposed, finish - deadline)
+    return max(0.0, exposed)
 
 
 def scaling_efficiency(layers: Sequence[LayerBalance], hw: HardwareConfig,
@@ -100,7 +191,7 @@ def scaling_efficiency(layers: Sequence[LayerBalance], hw: HardwareConfig,
     (sum_i bubble_i+ + sum comp_i / comp_sys).  Positive bubbles are the
     un-hidden communication; bubble_0 (the first layer) is never hidable."""
     comp_sys = hw.peak_flops * efficiency
-    t_comp = sum(l.comp for l in layers) / comp_sys
+    t_comp = sum(lyr.comp for lyr in layers) / comp_sys
     bubbles = bubble_schedule(layers, hw, efficiency)
     t_bubble = sum(max(0.0, b) for b in bubbles)
     return t_comp / (t_comp + t_bubble)
@@ -112,8 +203,8 @@ def max_data_parallel_nodes(layers: Sequence[LayerBalance],
     where L_k is the last layer in the data-parallel regime.  comp here is
     per data point (MB_node = 1)."""
     k = len(layers) - 1
-    ocomp_k = sum(l.comp for l in layers[:k]) + layers[k].comp / 3.0
-    ocomms_k = sum(l.comm for l in layers)
+    ocomp_k = sum(lyr.comp for lyr in layers[:k]) + layers[k].comp / 3.0
+    ocomms_k = sum(lyr.comm for lyr in layers)
     n = minibatch * (hw.link_bw / hw.peak_flops) * (ocomp_k / ocomms_k)
     return min(float(minibatch), n)  # >= 1 data point per node
 
@@ -128,13 +219,13 @@ def model_parallel_comm_bytes(ifm: int, in_hw: int, minibatch: int,
     return size_data * ifm * in_hw * in_hw * minibatch
 
 
-def model_parallel_preferred(l: ConvLayerSpec, in_hw: int, minibatch: int,
+def model_parallel_preferred(lyr: ConvLayerSpec, in_hw: int, minibatch: int,
                              overlap: float = 1.0) -> bool:
     """Paper §3.2 decision rule:
     ofm*k_w*k_h*(2-overlap) > input_w*input_h*minibatch  => model parallel.
     For FC layers (k=in=1): ofm > minibatch => model parallel."""
-    k = max(l.kernel, 1)
-    return l.ofm * k * k * (2.0 - overlap) > in_hw * in_hw * minibatch
+    k = max(lyr.kernel, 1)
+    return lyr.ofm * k * k * (2.0 - overlap) > in_hw * in_hw * minibatch
 
 
 # ---------------------------------------------------------------------------
@@ -296,13 +387,13 @@ def network_balance(conv_layers: Sequence[ConvLayerSpec],
     mb_node = max(1.0, minibatch / nodes)
     comp_sys = hw.peak_flops * compute_eff
 
-    conv = [LayerBalance(f"conv{i}", conv_comp_flops(l, mb_node),
-                         data_parallel_comm_bytes(l, overlap))
-            for i, l in enumerate(conv_layers)]
-    t_conv_comp = sum(l.comp for l in conv) / comp_sys
+    conv = [LayerBalance(f"conv{i}", conv_comp_flops(lyr, mb_node),
+                         data_parallel_comm_bytes(lyr, overlap))
+            for i, lyr in enumerate(conv_layers)]
+    t_conv_comp = sum(lyr.comp for lyr in conv) / comp_sys
     if nodes == 1:
         t_conv = t_conv_comp
-        t_fc = sum(fc_comp_flops(l.ifm, l.ofm, minibatch) for l in fc_layers) / comp_sys
+        t_fc = sum(fc_comp_flops(lyr.ifm, lyr.ofm, minibatch) for lyr in fc_layers) / comp_sys
         return dict(step_time=t_conv + t_fc, efficiency=1.0, G_fc=1)
 
     bubbles = bubble_schedule(conv, hw, compute_eff)
@@ -310,17 +401,17 @@ def network_balance(conv_layers: Sequence[ConvLayerSpec],
 
     t_fc = 0.0
     G_used = 1
-    for l in fc_layers:
-        G = optimal_group_count(nodes, minibatch, l.ofm)
+    for lyr in fc_layers:
+        G = optimal_group_count(nodes, minibatch, lyr.ofm)
         G_used = G
-        comm = hybrid_comm_bytes(l.ifm, l.ofm, 1, 1, minibatch, G, nodes,
+        comm = hybrid_comm_bytes(lyr.ifm, lyr.ofm, 1, 1, minibatch, G, nodes,
                                  overlap=0.0)
-        comp = fc_comp_flops(l.ifm, l.ofm, minibatch) / nodes
+        comp = fc_comp_flops(lyr.ifm, lyr.ofm, minibatch) / nodes
         t_fc += comp / comp_sys + comm / hw.link_bw + hw.sw_latency
     step = t_conv + t_fc
     # efficiency vs perfect scaling of the single-node time
-    single = (sum(conv_comp_flops(l, minibatch) for l in conv_layers)
-              + sum(fc_comp_flops(l.ifm, l.ofm, minibatch) for l in fc_layers)) / comp_sys
+    single = (sum(conv_comp_flops(lyr, minibatch) for lyr in conv_layers)
+              + sum(fc_comp_flops(lyr.ifm, lyr.ofm, minibatch) for lyr in fc_layers)) / comp_sys
     eff = single / (nodes * step)
     return dict(step_time=step, efficiency=min(1.0, eff), G_fc=G_used)
 

@@ -123,20 +123,48 @@ BATCH_SPECS = {
 }
 
 
+_SENTINEL = object()    # queued when the source is exhausted: a finite
+#                         source must end the consumer's iteration, not
+#                         leave it blocked on an empty queue forever
+
+
 class Prefetcher:
-    """Background-thread prefetch with a bounded queue (double buffering)."""
+    """Background-thread prefetch with a bounded queue (double buffering).
+
+    Finite sources terminate cleanly: exhaustion enqueues a sentinel that
+    ``__next__`` turns into ``StopIteration``.  ``close()`` stops the
+    worker, drains the queue and JOINS the thread (bounded), so no worker
+    is left blocked on a full queue after the consumer goes away."""
 
     def __init__(self, source: Iterator, depth: int = 2,
                  place: Optional[Callable] = None):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._place = place or (lambda b: jax.tree.map(jnp.asarray, b))
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+
+        def _put(item) -> bool:
+            # bounded put that gives up when close() intervenes, so the
+            # worker can never deadlock against a full queue
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
-            for item in source:
-                if self._stop.is_set():
-                    return
-                self._q.put(item)
+            try:
+                for item in source:
+                    if not _put(item):
+                        return
+            except BaseException as e:     # noqa: BLE001 — must cross threads
+                # a crashed pipeline is NOT exhaustion: record the exception
+                # so the consumer re-raises it instead of quietly stopping
+                self._error = e
+            finally:
+                _put(_SENTINEL)
 
         self._t = threading.Thread(target=worker, daemon=True)
         self._t.start()
@@ -145,14 +173,25 @@ class Prefetcher:
         return self
 
     def __next__(self):
-        return self._place(self._q.get())
+        item = self._q.get()
+        if item is _SENTINEL:
+            try:                      # keep raising on subsequent calls
+                self._q.put_nowait(_SENTINEL)
+            except queue.Full:
+                pass
+            if self._error is not None:
+                raise self._error
+            raise StopIteration
+        return self._place(item)
 
     def close(self):
         self._stop.set()
-        try:
-            self._q.get_nowait()
-        except queue.Empty:
-            pass
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._t.join(timeout=5.0)
 
 
 def make_placer(mesh: Optional[Mesh], rules) -> Callable:

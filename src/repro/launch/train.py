@@ -4,9 +4,14 @@ A thin argparse shim over the declarative run-assembly API: flags build a
 ``repro.api.RunSpec``, ``compile_run`` does the assembly (family resolution,
 mesh, placement, update-path selection), and ``Run.fit`` trains.
 
-    # the paper's §3.4 strip update through the bucketed comm subsystem
+    # the paper's §3.4 strip update through the bucketed comm subsystem,
+    # with each bucket's reduce issued inside backprop (§3.1 overlap)
     python -m repro.launch.train --arch vgg-a --smoke \\
-        --parallel zero1 --bucket-mb 4 --wire-dtype bf16
+        --parallel zero1 --bucket-mb 4 --wire-dtype bf16 --overlap
+
+A ``--ckpt-dir`` run periodically checkpoints AND auto-resumes: relaunching
+the same command picks up from the latest saved step (params, optimizer
+strips and data-stream position), not from step 0.
 
 On CPU (this container) use --smoke for the reduced config; on a real TPU
 slice the full config shards across the detected devices with the same
@@ -24,11 +29,13 @@ WIRE_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
 
 def spec_from_args(args) -> RunSpec:
     comm = None
-    if args.bucket_mb is not None or args.wire_dtype != "fp32":
+    if args.bucket_mb is not None or args.wire_dtype != "fp32" \
+            or args.overlap:
         bucket_mb = 4.0 if args.bucket_mb is None else args.bucket_mb
         comm = CommConfig(bucket_bytes=int(bucket_mb * MIB),
                           reduce_dtype=WIRE_DTYPES[args.wire_dtype],
-                          hierarchical=args.pods > 1)
+                          hierarchical=args.pods > 1,
+                          overlap=args.overlap)
     ckpt_every = 0
     if args.ckpt_dir:
         ckpt_every = args.ckpt_every if args.ckpt_every \
@@ -62,6 +69,10 @@ def main(argv=None):
                          "(default 4)")
     ap.add_argument("--wire-dtype", default="fp32", choices=list(WIRE_DTYPES),
                     help="gradient part-reduce wire dtype (zero1)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="issue each bucket's part-reduce inside the "
+                         "backward pass (§3.1 bubble schedule) instead of "
+                         "reducing after value_and_grad (zero1)")
     ap.add_argument("--optimizer", default=None,
                     choices=["adamw", "sgd"],
                     help="default: family choice (momentum SGD for the "
@@ -72,18 +83,22 @@ def main(argv=None):
                          "when --ckpt-dir is set)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if (args.bucket_mb is not None or args.wire_dtype != "fp32") \
-            and args.parallel != "zero1":
-        ap.error("--bucket-mb / --wire-dtype configure the explicit "
-                 "bucketed collectives; add --parallel zero1")
+    if (args.bucket_mb is not None or args.wire_dtype != "fp32"
+            or args.overlap) and args.parallel != "zero1":
+        ap.error("--bucket-mb / --wire-dtype / --overlap configure the "
+                 "explicit bucketed collectives; add --parallel zero1")
 
     run = compile_run(spec_from_args(args))
     print(f"arch: {run.cfg.name}  family={run.family.family}  "
           f"parallel={run.spec.parallel}  "
+          f"overlap={run.spec.comm.overlap if run.spec.comm else False}  "
           f"mesh={dict(run.mesh.shape) if run.mesh is not None else None}")
-    hist = run.fit()
+    hist = run.fit()   # auto-resumes from the latest --ckpt-dir checkpoint
     run.close()
-    print(f"final loss: {hist[-1]['loss']:.4f}")
+    if hist:
+        print(f"final loss: {hist[-1]['loss']:.4f}")
+    else:
+        print("checkpoint already at or past --steps; nothing to train")
     return hist
 
 

@@ -21,16 +21,28 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
 
+def _key(kind: str, i: int, part: str) -> str:
+    """Zero-padded layer index so LEXICAL dict-key order (what jax.tree
+    flattening sorts by) equals FORWARD layer order — conv2 must not sort
+    after conv10, or the comm bucket plan (tree order) interleaves first-
+    and last-layer leaves and the §3.1 overlap schedule degrades to
+    everything-ready-last (see repro.comm.overlap)."""
+    return f"{kind}{i:02d}_{part}"
+
+
 def param_specs(cfg: CNNConfig) -> Dict[str, Spec]:
     sp: Dict[str, Spec] = {}
-    for i, l in enumerate(cfg.layers):
-        if l.kind == "conv":
-            sp[f"conv{i}_w"] = Spec((l.kernel, l.kernel, l.ifm, l.ofm),
-                                    ("kernel", "kernel", "embed", "ff"))
-            sp[f"conv{i}_b"] = Spec((l.ofm,), ("ff",), init="zeros")
-        elif l.kind == "fc":
-            sp[f"fc{i}_w"] = Spec((l.ifm, l.ofm), ("embed", "ff"))
-            sp[f"fc{i}_b"] = Spec((l.ofm,), ("ff",), init="zeros")
+    for i, lyr in enumerate(cfg.layers):
+        if lyr.kind == "conv":
+            sp[_key("conv", i, "w")] = Spec(
+                (lyr.kernel, lyr.kernel, lyr.ifm, lyr.ofm),
+                ("kernel", "kernel", "embed", "ff"))
+            sp[_key("conv", i, "b")] = Spec((lyr.ofm,), ("ff",),
+                                            init="zeros")
+        elif lyr.kind == "fc":
+            sp[_key("fc", i, "w")] = Spec((lyr.ifm, lyr.ofm),
+                                          ("embed", "ff"))
+            sp[_key("fc", i, "b")] = Spec((lyr.ofm,), ("ff",), init="zeros")
     return sp
 
 
@@ -43,22 +55,23 @@ def forward(params, cfg: CNNConfig, x: jax.Array,
             use_pallas: bool = False) -> jax.Array:
     """x: (N, H, W, 3) -> logits (N, num_classes)."""
     h = x
-    for i, l in enumerate(cfg.layers):
-        if l.kind == "conv":
-            w = params[f"conv{i}_w"]
+    for i, lyr in enumerate(cfg.layers):
+        if lyr.kind == "conv":
+            w = params[_key("conv", i, "w")]
             if use_pallas:
-                h = kops.conv2d(h, w, stride=l.stride, padding=l.pad)
+                h = kops.conv2d(h, w, stride=lyr.stride, padding=lyr.pad)
             else:
-                h = kref.conv2d_ref(h, w, stride=l.stride, padding=l.pad)
-            h = jax.nn.relu(h + params[f"conv{i}_b"])
+                h = kref.conv2d_ref(h, w, stride=lyr.stride, padding=lyr.pad)
+            h = jax.nn.relu(h + params[_key("conv", i, "b")])
             h = ctx.constrain(h, "batch", None, None, "ff")
-        elif l.kind == "pool":
+        elif lyr.kind == "pool":
             h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1),
                                   (1, 2, 2, 1), "VALID")
-        elif l.kind == "fc":
+        elif lyr.kind == "fc":
             if h.ndim == 4:
                 h = h.reshape(h.shape[0], -1)
-            h = h @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
+            h = h @ params[_key("fc", i, "w")] \
+                + params[_key("fc", i, "b")]
             last = (i == len(cfg.layers) - 1)
             if not last:
                 h = jax.nn.relu(h)

@@ -21,10 +21,14 @@ from repro.core.sharding import ShardingCtx
 def param_specs(cfg: DNNConfig) -> Dict[str, Spec]:
     dims = [cfg.input_dim] + [cfg.hidden_dim] * cfg.num_hidden \
         + [cfg.output_dim]
+    # layer-major zero-padded keys: jax flattens dicts in LEXICAL key
+    # order, and the comm bucket plan follows tree order — "b0..bN, w0..wN"
+    # would interleave every layer's bias away from its weight and break
+    # the §3.1 backprop-readiness order (see models/cnn._key)
     sp = {}
     for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
-        sp[f"w{i}"] = Spec((a, b), ("embed", "ff"))
-        sp[f"b{i}"] = Spec((b,), ("ff",), init="zeros")
+        sp[f"fc{i:02d}_w"] = Spec((a, b), ("embed", "ff"))
+        sp[f"fc{i:02d}_b"] = Spec((b,), ("ff",), init="zeros")
     return sp
 
 
@@ -37,7 +41,7 @@ def forward(params, cfg: DNNConfig, x: jax.Array,
     h = x
     n_layers = cfg.num_hidden + 1
     for i in range(n_layers):
-        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        h = h @ params[f"fc{i:02d}_w"] + params[f"fc{i:02d}_b"]
         if i < n_layers - 1:
             h = jax.nn.sigmoid(h)       # CD-DNN uses sigmoid hidden units
             h = ctx.constrain(h, "batch", "ff")

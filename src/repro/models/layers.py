@@ -115,7 +115,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vc = v.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         ci, kb, vb = inp                                      # (B,chunk,Hkv,D)
         if g > 1:
             kb = jnp.repeat(kb, g, axis=2)
@@ -134,17 +134,17 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l = l * alpha + p.sum(-1)
+        lsum = lsum * alpha + p.sum(-1)
         acc = acc * alpha[..., None] + jnp.einsum(
             "bqhk,bkhd->bqhd", p, vb.astype(jnp.float32))
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     init = (jnp.full((B, Sq, Hq), NEG_INF, jnp.float32),
             jnp.zeros((B, Sq, Hq), jnp.float32),
             jnp.zeros((B, Sq, Hq, D), jnp.float32))
-    (m, l, acc), _ = lax.scan(
+    (m, lsum, acc), _ = lax.scan(
         body, init, (jnp.arange(n_chunks), kc, vc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return out.astype(q.dtype)
 
 

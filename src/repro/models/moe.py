@@ -117,7 +117,8 @@ def moe_ep_block(p: dict, x: jax.Array, cfg: ModelConfig,
                  ).reshape(T)
         flat_i = top_i.reshape(T)
         toks = jnp.repeat(h_loc.reshape(B_loc * S, d), k, axis=0)  # (T,d)
-        sl = lambda t: lax.dynamic_slice_in_dim(t, i_shard * Ts, Ts, 0)
+        def sl(t):
+            return lax.dynamic_slice_in_dim(t, i_shard * Ts, Ts, 0)
         my_i, my_w, my_toks = sl(flat_i), sl(top_w), sl(toks)
         dest = my_i // E_loc                          # owning shard
         e_loc = my_i % E_loc

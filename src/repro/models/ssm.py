@@ -266,7 +266,10 @@ def _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk: int,
     if S % chunk:
         chunk = S
     nc = S // chunk
-    rs = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+    def rs(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1))
+
     qc, kc, vc = rs(q), rs(k), rs(v)                 # (nc,B,l,H,P)
     fc, ic = rs(log_f), rs(log_i)                    # (nc,B,l,H)
 

@@ -23,7 +23,8 @@ class AdamW:
     weight_decay: float = 0.0
 
     def init(self, params) -> AdamWState:
-        z = lambda p: jnp.zeros_like(p)
+        def z(p):
+            return jnp.zeros_like(p)
         return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params),
                           jnp.zeros((), jnp.int32))
 

@@ -37,10 +37,81 @@ from jax.sharding import NamedSharding
 from repro.comm.bucketer import (
     CommConfig, pack_bucket, plan_buckets, unpack_buckets,
 )
-from repro.comm.schedule import make_schedule
+from repro.comm.schedule import group_axes, make_schedule
 from repro.core.collectives import flatten_pad, strip_broadcast, strip_reduce
 
 DEFAULT_COMM = CommConfig()
+
+
+def _owner_perm(comm: CommConfig, mesh: Mesh, axes):
+    # row j of a (G, n/G) state tensor lands on the member at flat mesh
+    # index j, but under the hierarchical schedule that member OWNS strip
+    # owner_index = d*G_out + p — so value-initialized optimizer state must
+    # be laid out in owner order (zeros-init state is insensitive to this)
+    if comm.hierarchical and len(axes) == 2:
+        g_out, g_in = mesh.shape[axes[0]], mesh.shape[axes[1]]
+        return np.array(
+            [d * g_out + p for p in range(g_out) for d in range(g_in)])
+    return None
+
+
+def _make_bucketed_init(optimizer, mesh: Mesh, axes, axis_arg, G: int,
+                        comm: CommConfig):
+    """init_fn placing (G, n/G) fusion-buffer strip state on the mesh —
+    shared by the monolithic and the backprop-overlapped zero1 paths (both
+    consume the same plan and the same owner layout)."""
+    perm = _owner_perm(comm, mesh, axes)
+
+    def _strip_init(params):
+        plan = plan_buckets(params, G, comm.bucket_bytes)
+        flat = jax.tree.leaves(params)
+        # (G, n/G) fusion-buffer strips: dim 0 sharded over the data axes
+        strips = [pack_bucket(flat, b).reshape(G, -1) for b in plan.buckets]
+        if perm is not None:
+            strips = [s[perm] for s in strips]
+        return optimizer.init(strips)
+
+    def init_fn(params):
+        # compute replicated, then reshard with device_put: jit with
+        # out_shardings miscompiles this pack+reshard pattern on jax 0.4.x
+        # (values arrive multiplied by a mesh-axis extent)
+        with jax.set_mesh(mesh):
+            state = jax.jit(_strip_init)(params)
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)), state)
+        return jax.tree.map(jax.device_put, state, shardings)
+
+    return init_fn
+
+
+def _apply_strip_update(optimizer, sched, plan, G: int, params, g_strips,
+                        opt_state, lr):
+    """Steps 2–4 of the §3.4 update, INSIDE shard_map: slice this member's
+    param strips, run the optimizer on its local state row, part-broadcast
+    the updated strips, un-fuse back into tensors.  ``g_strips`` are the
+    already-reduced fp32 mean-gradient strips, one per bucket."""
+    flat_params, treedef = jax.tree.flatten(params)
+    i = sched.owner_index()
+    # 2) slice this member's strip of the (replicated) params
+    p_strips = []
+    for b in plan.buckets:
+        pbuf = pack_bucket(flat_params, b)
+        n = b.padded_size // G
+        p_strips.append(lax.dynamic_slice(pbuf, (i * n,), (n,)))
+    # 3) serial optimizer on the bucket strips (elementwise, so fusing
+    #    tensors into one buffer does not change the math); opt_state
+    #    enters as the local strip because shard_map split dim 0
+    s_local = jax.tree.map(
+        lambda s: s[0] if s.ndim >= 2 else s, opt_state)
+    new_p_strips, new_state = optimizer.update(g_strips, s_local,
+                                               p_strips, lr)
+    # 4) one part-broadcast per bucket (always fp32 — weights are never
+    #    quantized on the wire), then un-fuse back into tensors
+    bufs = [sched.broadcast(ps) for ps in jax.tree.leaves(new_p_strips)]
+    new_params = jax.tree.unflatten(treedef, unpack_buckets(bufs, plan))
+    new_state = jax.tree.map(
+        lambda s: s[None] if s.ndim >= 1 else s, new_state)
+    return new_params, new_state
 
 
 def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
@@ -54,79 +125,24 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
 
     update_fn(params, grads, opt_state, lr) -> (new_params, new_opt_state)
     """
-    axes = tuple(a for a in data_axes if a in mesh.axis_names)
-    axis_arg = axes if len(axes) > 1 else axes[0]
-    G = 1
-    for a in axes:
-        G *= mesh.shape[a]
+    axes, axis_arg, G = group_axes(mesh, data_axes)
 
     if comm is None:
         return _make_per_tensor_update(optimizer, mesh, axis_arg, G)
 
-    def _plan(params):
-        return plan_buckets(params, G, comm.bucket_bytes)
-
-    # row j of a (G, n/G) state tensor lands on the member at flat mesh
-    # index j, but under the hierarchical schedule that member OWNS strip
-    # owner_index = d*G_out + p — so value-initialized optimizer state must
-    # be laid out in owner order (zeros-init state is insensitive to this)
-    if comm.hierarchical and len(axes) == 2:
-        g_out, g_in = mesh.shape[axes[0]], mesh.shape[axes[1]]
-        _owner_perm = np.array(
-            [d * g_out + p for p in range(g_out) for d in range(g_in)])
-    else:
-        _owner_perm = None
-
-    def _strip_init(params):
-        plan = _plan(params)
-        flat = jax.tree.leaves(params)
-        # (G, n/G) fusion-buffer strips: dim 0 sharded over the data axes
-        strips = [pack_bucket(flat, b).reshape(G, -1) for b in plan.buckets]
-        if _owner_perm is not None:
-            strips = [s[_owner_perm] for s in strips]
-        return optimizer.init(strips)
-
-    def init_fn(params):
-        # compute replicated, then reshard with device_put: jit with
-        # out_shardings miscompiles this pack+reshard pattern on jax 0.4.x
-        # (values arrive multiplied by a mesh-axis extent)
-        with jax.set_mesh(mesh):
-            state = jax.jit(_strip_init)(params)
-        shardings = jax.tree.map(
-            lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)), state)
-        return jax.tree.map(jax.device_put, state, shardings)
+    init_fn = _make_bucketed_init(optimizer, mesh, axes, axis_arg, G, comm)
 
     def _update(params, grads, opt_state, lr):
-        plan = _plan(params)
+        plan = plan_buckets(params, G, comm.bucket_bytes)
         sched = make_schedule(axis_arg, comm.hierarchical)
-        flat_params, treedef = jax.tree.flatten(params)
         flat_grads = jax.tree.leaves(grads)
-        i = sched.owner_index()
-
         # 1) one part-reduce per BUCKET: pack gradients into the fusion
         #    buffer, reduce on the wire dtype, mean in fp32
-        g_strips, p_strips = [], []
-        for b in plan.buckets:
-            gbuf = pack_bucket(flat_grads, b)
-            g_strips.append(sched.reduce(gbuf, comm.wire_dtype) / G)
-            # 2) slice this member's strip of the (replicated) params
-            pbuf = pack_bucket(flat_params, b)
-            n = b.padded_size // G
-            p_strips.append(lax.dynamic_slice(pbuf, (i * n,), (n,)))
-        # 3) serial optimizer on the bucket strips (elementwise, so fusing
-        #    tensors into one buffer does not change the math); opt_state
-        #    enters as the local strip because shard_map split dim 0
-        s_local = jax.tree.map(
-            lambda s: s[0] if s.ndim >= 2 else s, opt_state)
-        new_p_strips, new_state = optimizer.update(g_strips, s_local,
-                                                   p_strips, lr)
-        # 4) one part-broadcast per bucket (always fp32 — weights are never
-        #    quantized on the wire), then un-fuse back into tensors
-        bufs = [sched.broadcast(ps) for ps in jax.tree.leaves(new_p_strips)]
-        new_params = jax.tree.unflatten(treedef, unpack_buckets(bufs, plan))
-        new_state = jax.tree.map(
-            lambda s: s[None] if s.ndim >= 1 else s, new_state)
-        return new_params, new_state
+        g_strips = [sched.reduce(pack_bucket(flat_grads, b),
+                                 comm.wire_dtype) / G
+                    for b in plan.buckets]
+        return _apply_strip_update(optimizer, sched, plan, G, params,
+                                   g_strips, opt_state, lr)
 
     def update_fn(params, grads, opt_state, lr):
         pspec = jax.tree.map(lambda _: P(), params)
@@ -139,6 +155,36 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
         return fn(params, grads, opt_state, lr)
 
     return init_fn, update_fn
+
+
+def make_overlapped_update(optimizer, mesh: Mesh, data_axes=("data",),
+                           comm: Optional[CommConfig] = None):
+    """The backprop-overlapped counterpart of ``make_distributed_update``:
+    (init_fn, local_update) where ``local_update`` consumes per-bucket
+    ALREADY-REDUCED mean-gradient strips instead of a raw gradient tree —
+    the reduces were issued inside the backward pass by the
+    ``repro.comm.overlap`` hooks, so step 1 of the §3.4 schedule no longer
+    exists as a post-grad block.
+
+    Unlike ``make_distributed_update``'s update_fn, ``local_update(params,
+    g_strips, opt_state, lr)`` must be called INSIDE ``shard_map`` over the
+    same data axes: the overlapped train step owns the shard_map, because
+    the bucket reduces live in its ``value_and_grad`` backward pass (see
+    ``train.make_overlapped_train_step``).  ``init_fn`` is the shared
+    bucketed strip init — state layouts are identical, so a checkpoint
+    written by one path restores into the other.
+    """
+    comm = DEFAULT_COMM if comm is None else comm
+    axes, axis_arg, G = group_axes(mesh, data_axes)
+    init_fn = _make_bucketed_init(optimizer, mesh, axes, axis_arg, G, comm)
+    sched = make_schedule(axis_arg, comm.hierarchical)
+
+    def local_update(params, g_strips, opt_state, lr):
+        plan = plan_buckets(params, G, comm.bucket_bytes)
+        return _apply_strip_update(optimizer, sched, plan, G, params,
+                                   g_strips, opt_state, lr)
+
+    return init_fn, local_update
 
 
 def _state_spec(s, axis_arg) -> P:

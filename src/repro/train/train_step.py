@@ -12,6 +12,11 @@ Two equivalent realizations of the paper's §3.4 update:
     property-tested.  Passing its ``update_fn`` as ``dist_update`` below
     routes the whole ZeRO-1 train step through the bucketed fusion-buffer
     collectives instead of the serial ``optimizer.update``.
+
+``make_overlapped_train_step`` is the third realization — the paper's §3.1
+overlap schedule: the whole step runs inside one shard_map and each gradient
+bucket's part-reduce is issued INSIDE the backward pass (repro.comm.overlap)
+instead of after ``value_and_grad`` returns.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.sharding import ShardingRules
@@ -57,6 +63,66 @@ def make_train_step(loss_fn: Callable, optimizer, lr_schedule,
                                                      params, lr)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_overlapped_train_step(loss_fn: Callable, lr_schedule,
+                               mesh: Mesh, data_axes, comm,
+                               local_update: Callable,
+                               grad_clip: float = 1.0):
+    """The §3.1 backprop-overlapped realization of the explicit ZeRO-1 step.
+
+    The WHOLE step — local loss, hooked backprop, strip optimizer,
+    part-broadcast — runs inside one ``shard_map`` over the data axes: each
+    member computes the loss of ITS batch shard, and every gradient
+    bucket's part-reduce is issued in the backward pass the moment the
+    bucket's last leaf gradient materializes (``repro.comm.overlap``), so
+    the compiler may hide it under the remaining backprop instead of
+    serializing the whole tree reduction after ``value_and_grad``.
+
+    ``loss_fn(params, batch)`` must be the mesh-free (serial-ctx) loss:
+    inside shard_map every member's compute is local, so GSPMD sharding
+    constraints do not apply.  ``local_update`` comes from
+    ``optim.dist.make_overlapped_update`` (same comm config).  Matches
+    ``make_train_step`` — loss, clip, metrics — to float tolerance;
+    property-tested in tests/test_distributed.py.
+    """
+    from repro.comm.overlap import make_overlap_grad
+    from repro.comm.schedule import group_axes
+
+    _, axis_arg, G = group_axes(mesh, data_axes)
+    overlap_grad = make_overlap_grad(loss_fn, axis_arg, comm, G)
+
+    def local_step(params, opt_state, step_idx, batch):
+        loss, g_strips = overlap_grad(params, batch)
+        loss = lax.psum(loss, axis_arg) / G
+        # global grad norm from the reduced strips: every element of the
+        # mean gradient lives in exactly one member's strip (bucket padding
+        # is zeros), so the psum of local square-sums is the full norm²
+        sq = sum(jnp.sum(jnp.square(s)) for s in g_strips)
+        gnorm = jnp.sqrt(lax.psum(sq, axis_arg))
+        if grad_clip > 0:
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            g_strips = [g * scale for g in g_strips]
+        lr = lr_schedule(step_idx)
+        new_params, new_state = local_update(params, g_strips, opt_state, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    def train_step(params, opt_state, step_idx, batch):
+        pspec = jax.tree.map(lambda _: P(), params)
+        sspec = jax.tree.map(
+            lambda s: P(axis_arg) if getattr(s, "ndim", 0) >= 2 else P(),
+            opt_state)
+        bspec = jax.tree.map(lambda _: P(axis_arg), batch)
+        mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+        fn = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(pspec, sspec, P(), bspec),
+            out_specs=(pspec, sspec, mspec),
+            check_vma=False)
+        return fn(params, opt_state, step_idx, batch)
 
     return train_step
 

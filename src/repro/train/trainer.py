@@ -45,27 +45,55 @@ class TrainerConfig:
 class Trainer:
     train_step: Callable            # (params, opt_state, step, batch) -> ...
     cfg: TrainerConfig = field(default_factory=TrainerConfig)
+    jit: bool = True                # False: train_step is already jitted
+    #                                 (e.g. Run.jit_step's shared cache)
+    warm: bool = False              # True: step_fn has executed before —
+    #                                 first step is NOT a compile, time it
+    #                                 like any other (Run re-fit/resume)
 
     def fit(self, params, opt_state, data_iter: Iterable,
             start_step: int = 0, log_fn=print):
         history = []
-        step_fn = jax.jit(self.train_step, donate_argnums=(0, 1))
+        step_fn = jax.jit(self.train_step, donate_argnums=(0, 1)) \
+            if self.jit else self.train_step
         t0 = time.perf_counter()
+        t_compile = 0.0
         items_seen, unit = 0, "tok"
         for step in range(start_step, self.cfg.total_steps):
-            batch = next(data_iter)
+            try:
+                batch = next(data_iter)
+            except StopIteration:
+                # finite source ran dry (Prefetcher signals exhaustion as
+                # StopIteration): end training with the progress made, do
+                # not lose params/opt_state/history to an escaping exception
+                log_fn(f"data exhausted at step {step} "
+                       f"(of {self.cfg.total_steps}); stopping")
+                break
             params, opt_state, metrics = step_fn(params, opt_state,
                                                  step, batch)
-            n, unit = _batch_items(batch)
-            items_seen += n
-            if (step + 1) % self.cfg.log_every == 0 or step == start_step:
+            first = step == start_step and not self.warm
+            if first:
+                # the first step is dominated by jit compile: block, report
+                # it separately, and restart the throughput clock so
+                # items/s measures steady-state steps only
+                jax.block_until_ready(metrics["loss"])
+                t_compile = time.perf_counter() - t0
+                t0 = time.perf_counter()
+            else:
+                n, unit = _batch_items(batch)
+                items_seen += n
+            # the FINAL step always logs, so history[-1] is the true end
+            # state (callers label checkpoints / report final loss from it)
+            if ((step + 1) % self.cfg.log_every == 0 or step == start_step
+                    or step + 1 == self.cfg.total_steps):
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
                 rate = items_seen / dt if dt > 0 else 0.0
+                tail = (f"compile {t_compile:6.1f} s" if first
+                        else f"{rate:9.0f} {unit}/s")
                 log_fn(f"step {step + 1:5d}  loss {loss:8.4f}  "
                        f"gnorm {float(metrics['grad_norm']):7.3f}  "
-                       f"lr {float(metrics['lr']):.2e}  "
-                       f"{rate:9.0f} {unit}/s")
+                       f"lr {float(metrics['lr']):.2e}  {tail}")
                 history.append(dict(step=step + 1, loss=loss,
                                     grad_norm=float(metrics["grad_norm"])))
             if (self.cfg.ckpt_every and self.cfg.ckpt_dir

@@ -6,6 +6,6 @@ import sys
 # subprocesses with their own --xla_force_host_platform_device_count.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
+import jax  # noqa: E402  (sys.path bootstrap must precede)
 
 jax.config.update("jax_enable_x64", False)

@@ -127,10 +127,12 @@ def test_paper_arch_one_train_step(arch):
     batch = jax.tree.map(jnp.asarray, next(stream_for(cfg, 4, 16)))
     if isinstance(cfg, CNNConfig):
         params = cnn.init_params(cfg, KEY)
-        loss = lambda p, b: cnn.loss_fn(p, cfg, b)
+        def loss(p, b):
+            return cnn.loss_fn(p, cfg, b)
     else:
         params = dnn.init_params(cfg, KEY)
-        loss = lambda p, b: dnn.loss_fn(p, cfg, b)
+        def loss(p, b):
+            return dnn.loss_fn(p, cfg, b)
     opt = AdamW()
     step = make_train_step(loss, opt, constant(1e-3))
     _, _, metrics = jax.jit(step)(params, opt.init(params), 0, batch)

@@ -28,11 +28,11 @@ def _conv(ifm, ofm, k, out_hw, stride=1):
 @settings(max_examples=50, deadline=None)
 def test_comp_comm_closed_form(ifm, ofm, k, out, mb):
     """comp/comm == 1.5*out_w*out_h*MB_node — independent of ifm/ofm/k."""
-    l = _conv(ifm, ofm, k, out)
-    comp = balance.conv_comp_flops(l, mb)
-    comm = balance.data_parallel_comm_bytes(l, overlap=1.0)
+    lyr = _conv(ifm, ofm, k, out)
+    comp = balance.conv_comp_flops(lyr, mb)
+    comm = balance.data_parallel_comm_bytes(lyr, overlap=1.0)
     assert comp / comm == pytest.approx(
-        balance.data_parallel_comp_comm_ratio(l, mb), rel=1e-9)
+        balance.data_parallel_comp_comm_ratio(lyr, mb), rel=1e-9)
 
 
 def test_table1_platform_ratios():
@@ -57,17 +57,17 @@ def test_network_comp_comm_ratios_vs_paper():
 
 def test_max_nodes_overfeat_fdr_matches_paper():
     """Paper Table 1: OverFeat-FAST on FDR scales to ~128 nodes (2/node)."""
-    layers = [LayerBalance(str(i), balance.conv_comp_flops(l, 1),
-                           balance.data_parallel_comm_bytes(l))
-              for i, l in enumerate(get_config("overfeat-fast").conv_layers())]
+    layers = [LayerBalance(str(i), balance.conv_comp_flops(lyr, 1),
+                           balance.data_parallel_comm_bytes(lyr))
+              for i, lyr in enumerate(get_config("overfeat-fast").conv_layers())]
     n = balance.max_data_parallel_nodes(layers, FDR, 256)
     assert 100 < n <= 160, n
 
 
 def test_max_nodes_vgg_capped_by_minibatch():
-    layers = [LayerBalance(str(i), balance.conv_comp_flops(l, 1),
-                           balance.data_parallel_comm_bytes(l))
-              for i, l in enumerate(get_config("vgg-a").conv_layers())]
+    layers = [LayerBalance(str(i), balance.conv_comp_flops(lyr, 1),
+                           balance.data_parallel_comm_bytes(lyr))
+              for i, lyr in enumerate(get_config("vgg-a").conv_layers())]
     assert balance.max_data_parallel_nodes(layers, FDR, 256) == 256
 
 
@@ -83,8 +83,8 @@ def test_fc_prefers_model_parallel_when_ofm_gt_minibatch():
 
 def test_conv_prefers_data_parallel():
     """Typical conv (ofm<=1024, k=3, in_hw>=14, mb>=64): data parallel."""
-    l = _conv(256, 512, 3, 28)
-    assert not balance.model_parallel_preferred(l, in_hw=28, minibatch=64)
+    lyr = _conv(256, 512, 3, 28)
+    assert not balance.model_parallel_preferred(lyr, in_hw=28, minibatch=64)
 
 
 # ---------------------------------------------------------------------------
@@ -135,13 +135,13 @@ def test_bubble_first_layer_never_hidden():
 
 
 def test_scaling_efficiency_bounds():
-    layers = [LayerBalance(f"l{i}", 1e9 / (i + 1), 4e6) for i in range(5)]
+    layers = [LayerBalance(f"lyr{i}", 1e9 / (i + 1), 4e6) for i in range(5)]
     eff = balance.scaling_efficiency(layers, FDR)
     assert 0.0 < eff <= 1.0
 
 
 def test_efficiency_improves_with_more_compute_per_node():
-    small = [LayerBalance("l", 1e8, 4e6)]
-    big = [LayerBalance("l", 1e10, 4e6)]
+    small = [LayerBalance("lyr", 1e8, 4e6)]
+    big = [LayerBalance("lyr", 1e10, 4e6)]
     assert balance.scaling_efficiency(big, FDR) \
         >= balance.scaling_efficiency(small, FDR)

@@ -186,6 +186,133 @@ def test_ring_time_scales_with_bytes_and_members():
     assert balance.ring_collective_time(MIB, 1, FDR) == 0.0
 
 
+# ---------------------------------------------------------------------------
+# §3.1 overlap: readiness metadata + bubble schedule closed forms
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12),
+       bucket_bytes=st.sampled_from([0, 64, 4096, 10**9]))
+@settings(max_examples=25, deadline=None)
+def test_backprop_order_issues_last_leaves_first(seed, n, bucket_bytes):
+    """Backprop materializes gradients in reverse tree order, so the issue
+    order must visit buckets by descending trigger leaf, covering each
+    bucket exactly once."""
+    from repro.comm.overlap import bucket_triggers, issue_order
+    plan = plan_buckets(_tree(seed, n), 4, bucket_bytes)
+    for b in plan.buckets:
+        assert b.trigger_index == min(s.index for s in b.slots)
+    order = plan.backprop_order
+    assert sorted(order) == list(range(plan.n_collectives))
+    trig = [plan.buckets[b].trigger_index for b in order]
+    assert trig == sorted(trig, reverse=True)
+    # tree-order default of bucket_triggers == the Bucket property
+    assert bucket_triggers(plan) == tuple(
+        b.trigger_index for b in plan.buckets)
+    assert issue_order(bucket_triggers(plan)) == order
+
+
+def test_paper_family_tree_order_is_forward_layer_order():
+    """jax flattens dicts in LEXICAL key order, so the CNN/DNN param keys
+    must zero-pad their layer index: 'conv2' sorting after 'conv10' (or
+    'b0..bN' before 'w0..wN') would interleave first- and last-layer leaves
+    in the bucket plan and defeat the §3.1 overlap schedule for the paper's
+    own nets."""
+    import re
+    import jax
+    from repro.api import adapter_for
+    from repro.configs import get_config
+    for net in ("vgg-a", "overfeat-fast", "cd-dnn"):
+        cfg = get_config(net)
+        flat = jax.tree_util.tree_flatten_with_path(
+            adapter_for(cfg).param_specs(cfg))[0]
+        layers = [int(re.search(r"\d+", jax.tree_util.keystr(p)).group())
+                  for p, _ in flat]
+        assert layers == sorted(layers), (net, layers)
+
+
+def test_bucket_triggers_with_layer_map():
+    """A bucket spanning leaves of several layers is completed by its
+    EARLIEST forward layer (the last one backprop reaches)."""
+    from repro.comm.overlap import bucket_triggers, issue_order
+    tree = [jnp.zeros((8,), jnp.float32)] * 6
+    plan = plan_buckets(tree, 2, 64)      # 2 leaves (64 B) per bucket
+    assert plan.n_collectives == 3
+    leaf_layer = [0, 0, 1, 1, 2, 2]       # w+b per layer
+    assert bucket_triggers(plan, leaf_layer) == (0, 1, 2)
+    assert issue_order((0, 1, 2)) == (2, 1, 0)
+    # leaves interleaved across layers: min wins
+    assert bucket_triggers(plan, [2, 0, 1, 2, 0, 1]) == (0, 1, 0)
+
+
+def test_bucket_bubble_schedule_reduces_to_layer_closed_form():
+    """With exactly one bucket per layer the §3.1 bucket-granular schedule
+    IS the paper's per-layer ``bubble_schedule``."""
+    rng = np.random.default_rng(0)
+    layers = [balance.LayerBalance(f"lyr{i}", float(c), float(m))
+              for i, (c, m) in enumerate(zip(
+                  rng.uniform(1e9, 1e12, 7), rng.uniform(1e5, 1e8, 7)))]
+    for hw in (FDR, GBE):
+        want = balance.bubble_schedule(layers, hw, efficiency=0.7)
+        got = balance.bucket_bubble_schedule(
+            [lb.comm / hw.link_bw for lb in layers],
+            list(range(len(layers))),
+            [lb.comp for lb in layers], hw, efficiency=0.7)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_overlap_exposed_time_bounds():
+    """Timeline exposure: equals the all-exposed total with nothing to
+    overlap, vanishes when compute dwarfs comm, and never exceeds the
+    monolithic schedule."""
+    comm = [0.01, 0.02, 0.005, 0.04]
+    trig = [0, 1, 2, 3]
+    no_comp = balance.overlap_exposed_time(comm, trig, [0.0] * 4, FDR)
+    np.testing.assert_allclose(no_comp, sum(comm), rtol=1e-12)
+    huge = [1e18] * 4                   # seconds of compute per layer
+    assert balance.overlap_exposed_time(comm, trig, huge, FDR) == 0.0
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        n = rng.integers(1, 8)
+        comm = rng.uniform(1e-4, 1e-1, n).tolist()
+        trig = sorted(rng.integers(0, 5, n).tolist())
+        comps = rng.uniform(0, 1e12, 5).tolist()
+        on = balance.overlap_exposed_time(comm, trig, comps, FDR, 0.75)
+        assert 0.0 <= on <= sum(comm) + 1e-12
+
+
+def test_overlap_grad_strips_match_serial_gradient():
+    """On a 1-member group the hooked backward's strips ARE the packed
+    serial gradient (no reduction): the custom_vjp side channel is exact."""
+    import jax
+    from jax.sharding import AxisType, PartitionSpec as P
+    from repro.comm.bucketer import pack_bucket as pack
+    from repro.comm.overlap import make_overlap_grad
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(6, 3)),
+                               jnp.float32),
+              "b": jnp.zeros((3,), jnp.float32)}
+    batch = {"x": jnp.asarray(np.random.default_rng(1).normal(size=(4, 6)),
+                              jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"]) ** 2)
+
+    comm = CommConfig(bucket_bytes=64)
+    og = make_overlap_grad(loss, "data", comm, G=1)
+    with jax.set_mesh(mesh):
+        fn = jax.shard_map(og, mesh=mesh,
+                           in_specs=(P(), P("data")),
+                           out_specs=(P(), P("data")), check_vma=False)
+        lval, strips = jax.jit(fn)(params, batch)
+    ref_l, ref_g = jax.value_and_grad(loss)(params, batch)
+    plan = plan_buckets(params, 1, comm.bucket_bytes)
+    ref_strips = [pack(jax.tree.leaves(ref_g), b) for b in plan.buckets]
+    np.testing.assert_allclose(float(lval), float(ref_l), rtol=1e-6)
+    assert len(strips) == plan.n_collectives
+    for got, want in zip(strips, ref_strips):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+
 def test_hierarchical_beats_flat_ring_with_fast_pod_links():
     """Two-level 16x8 with 4x in-pod bandwidth beats one flat 128-ring: the
     cross-pod hop only moves strip bytes and the latency term shrinks from

@@ -35,8 +35,8 @@ def test_matmul_shapes_dtypes(m, n, k, dtype):
 
 @given(st.integers(0, 3), st.integers(0, 3), st.integers(0, 3))
 @settings(max_examples=12, deadline=None)
-def test_matmul_hypothesis_pow2(i, j, l):
-    m, n, k = 8 * 2**i, 128 * 2**j, 128 * 2**l
+def test_matmul_hypothesis_pow2(i, j, p):
+    m, n, k = 8 * 2**i, 128 * 2**j, 128 * 2**p
     a, b = _arr(m, k), _arr(k, n)
     np.testing.assert_allclose(blocked_matmul(a, b, interpret=True),
                                ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
@@ -138,6 +138,7 @@ def test_decode_attention_ref_ring_buffer_invariance():
     q = _arr(B, 1, H, D)
     ln = jnp.full((B,), C, jnp.int32)
     out1 = ref.decode_attention_ref(q, k, v, ln)
-    rot = lambda t: jnp.roll(t, 7, axis=1)
+    def rot(t):
+        return jnp.roll(t, 7, axis=1)
     out2 = ref.decode_attention_ref(q, rot(k), rot(v), ln)
     np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)

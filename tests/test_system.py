@@ -101,6 +101,171 @@ def test_prefetcher_matches_direct_iteration():
     np.testing.assert_array_equal(np.asarray(got), direct[0])
 
 
+def test_prefetcher_finite_source_raises_stop_iteration():
+    """A finite/exhausted source must end iteration, not block forever."""
+    batches = [{"x": np.zeros((2,), np.float32)} for _ in range(3)]
+    pf = Prefetcher(iter(batches))
+    got = [next(pf) for _ in range(3)]
+    assert len(got) == 3
+    with pytest.raises(StopIteration):
+        next(pf)
+    with pytest.raises(StopIteration):     # and keeps raising
+        next(pf)
+    pf.close()
+    assert not pf._t.is_alive()
+
+
+def test_prefetcher_close_joins_worker():
+    """close() must actually join the worker thread, including one blocked
+    on a full queue (infinite source, consumer gone)."""
+    def infinite():
+        i = 0
+        while True:
+            yield {"x": np.full((1,), i, np.float32)}
+            i += 1
+    pf = Prefetcher(infinite(), depth=2)
+    next(pf)
+    pf.close()
+    assert not pf._t.is_alive()
+
+
+def test_prefetcher_propagates_source_errors():
+    """A crashed pipeline must surface its exception, not masquerade as
+    clean exhaustion (which the trainer treats as normal end-of-data)."""
+    def bad_source():
+        yield {"x": np.zeros((2,), np.float32)}
+        raise OSError("corrupt shard")
+    pf = Prefetcher(bad_source())
+    next(pf)
+    with pytest.raises(OSError, match="corrupt shard"):
+        next(pf)
+    with pytest.raises(OSError):       # and keeps raising
+        next(pf)
+    pf.close()
+    assert not pf._t.is_alive()
+
+
+def test_restore_validates_shape_dtype_and_missing_leaves():
+    """restore() raises real exceptions (not asserts, which vanish under
+    python -O): shape mismatch, dtype mismatch, missing leaf, missing file."""
+    from repro.checkpoint import restore, save
+    tree = {"w": jnp.ones((3, 2), jnp.float32),
+            "n": jnp.zeros((), jnp.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 3, params=tree)
+        out, _ = restore(d, 3, params=tree)
+        assert out["params"]["w"].dtype == jnp.float32
+        with pytest.raises(ValueError, match="shape"):
+            restore(d, 3, params={"w": jnp.ones((2, 3), jnp.float32),
+                                  "n": tree["n"]})
+        with pytest.raises(ValueError, match="dtype"):
+            restore(d, 3, params={"w": jnp.ones((3, 2), jnp.bfloat16),
+                                  "n": tree["n"]})
+        with pytest.raises(KeyError, match="extra"):
+            restore(d, 3, params=dict(tree, extra=jnp.zeros((1,))))
+        with pytest.raises(FileNotFoundError):
+            restore(d, 4, params=tree)
+
+
+def test_trainer_stops_cleanly_when_data_exhausted():
+    """A finite source shorter than total_steps must END training with the
+    accumulated params/history, not leak StopIteration out of fit()."""
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    w0 = np.asarray(params["w"]).copy()    # fit() donates the input buffers
+    opt = MomentumSGD()
+
+    def loss(p, b):
+        return jnp.sum((p["w"] - b["x"]) ** 2)
+
+    step = make_train_step(loss, opt, constant(1e-2))
+    src = Prefetcher(iter([{"x": np.full((4,), i, np.float32)}
+                           for i in range(3)]))
+    lines = []
+    trainer = Trainer(step, TrainerConfig(total_steps=10, log_every=1))
+    out_params, _, hist = trainer.fit(params, opt.init(params), src,
+                                      log_fn=lines.append)
+    src.close()
+    assert [h["step"] for h in hist] == [1, 2, 3]
+    assert any("data exhausted at step 3" in ln for ln in lines)
+    assert not np.allclose(np.asarray(out_params["w"]), w0)
+
+
+def test_run_refit_resume_realigns_data_stream():
+    """Calling fit() again on the SAME Run must resume on the right batches:
+    the cached prefetcher has already advanced, so resume restarts the
+    seeded stream before fast-forwarding (else steps 4..5 would silently
+    retrain on batches ~10..11)."""
+    from repro.api import RunSpec, compile_run
+
+    def quiet(*_):
+        return None
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        spec = RunSpec(arch="cd-dnn", smoke=True, steps=6, batch=4, seq=0,
+                       lr=1e-3, schedule="constant", log_every=1,
+                       ckpt_every=4, ckpt_dir=d1)
+        ra = compile_run(spec)
+        ra.fit(log_fn=quiet)           # 0..5, checkpoint lands at step 4
+        lines = []
+        ha = ra.fit(log_fn=lines.append)   # auto-resume at 4, retrain 4..5
+        assert [h["step"] for h in ha] == [5, 6]
+        # warm re-fit: jit_step already executed, so no bogus 'compile 0.0s'
+        assert not any("compile" in str(ln) for ln in lines), lines
+        ra.close()
+        rb = compile_run(spec.replace(ckpt_dir=d2))
+        rb.fit(log_fn=quiet)
+        rb.close()
+        for a, b in zip(jax.tree.leaves(ra.params),
+                        jax.tree.leaves(rb.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-7)
+
+
+def test_trainer_reports_compile_time_separately():
+    """The first (jit-compiling) step must not pollute items/s: its log line
+    carries the compile time instead of a rate."""
+    cfg = smoke_variant(get_config("cd-dnn"))
+    from repro.models import dnn
+    params = dnn.init_params(cfg, KEY)
+    opt = MomentumSGD()
+    step = make_train_step(lambda p, b: dnn.loss_fn(p, cfg, b), opt,
+                           constant(1e-3))
+    src = Prefetcher(stream_for(cfg, 4, 0))
+    lines = []
+    trainer = Trainer(step, TrainerConfig(total_steps=6, log_every=2))
+    _, _, hist = trainer.fit(params, opt.init(params), src,
+                             log_fn=lines.append)
+    src.close()
+    assert "compile" in lines[0] and "/s" not in lines[0]
+    assert all("compile" not in ln and "samples/s" in ln
+               for ln in lines[1:])
+    assert hist[-1]["step"] == 6
+
+
+def test_run_step_and_fit_share_one_donated_jit():
+    """Run.step and Run.fit must hit ONE compile cache (the old per-call
+    jax.jit(train_step) re-traced and, without donate_argnums, kept a second
+    copy of the params alive)."""
+    from repro.api import RunSpec, compile_run
+    run = compile_run(RunSpec(arch="cd-dnn", smoke=True, steps=2, batch=4,
+                              seq=0, log_every=10))
+    traces = 0
+    orig = run.train_step
+    def counting(*args):
+        nonlocal traces
+        traces += 1
+        return orig(*args)
+    run.train_step = counting
+    run.fit(log_fn=lambda *_: None)           # compiles once
+    batch = next(run.data)
+    old_params_leaf = jax.tree.leaves(run.params)[0]
+    run.step(batch, step_idx=2)               # same cache: no retrace
+    run.close()
+    assert traces == 1
+    assert old_params_leaf.is_deleted()       # donated, not copied
+
+
 def test_warmup_cosine_schedule_shape():
     sched = warmup_cosine(1e-3, 10, 100)
     assert float(sched(0)) == 0.0
