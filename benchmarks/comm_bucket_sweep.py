@@ -19,22 +19,40 @@ the §3.1 bubble schedule (``CommConfig.overlap`` / ``--overlap``) hides each
 bucket's reduce under the backprop remaining below its trigger layer —
 ``core.balance.bucket_bubble_schedule`` over the same real plan, with the
 bucket→layer readiness metadata of ``repro.comm.overlap``.
+
+Every predicted time is per COLLECTIVE BACKEND (``--backend {lax,
+pallas-ring}``): the ``core.balance.RING_BACKEND_MODELS`` constants shift
+the latency/bandwidth terms per implementation.  ``measured_rows`` times
+the real executable schedule — the same ``FlatSchedule`` + backend the
+bucketed update drives — on a forced-8-device host mesh (subprocess, like
+tests/test_distributed.py) and pairs each wall-clock row with the model's
+prediction for the same plan.  Host-mesh CPU wall clock is not ICI time —
+the comparable quantities are the bucket-size TREND and the lax-vs-ring
+ratio, not absolute seconds (pallas-ring runs its hop kernels in interpret
+mode off-TPU, so its host numbers are pessimistic).
 """
 from __future__ import annotations
 
 import math
+import os
 import re
+import subprocess
+import sys
+import textwrap
 
 import jax
 
 from repro.comm.bucketer import plan_buckets
 from repro.comm.overlap import exposed_comm
-from repro.configs import (
-    get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
-)
+from repro.configs import XEON_E5_2666V3_10GBE as GBE, XEON_E5_2698V3_FDR as FDR, get_config
 from repro.core.balance import (
-    SIZE_F32, bucketed_allreduce_time, collective_count, conv_comp_flops,
-    fc_comp_flops, hierarchical_allreduce_time, optimal_bucket_bytes,
+    SIZE_F32,
+    bucketed_allreduce_time,
+    collective_count,
+    conv_comp_flops,
+    fc_comp_flops,
+    hierarchical_allreduce_time,
+    optimal_bucket_bytes,
     ring_collective_time,
 )
 
@@ -43,6 +61,9 @@ SWEEP_MIB = (0.25, 1.0, 4.0, 16.0, 32.0)
 G = 64           # the paper's 256-minibatch / 4-per-node operating point
 MB_NODE = 4      # data points per node at that operating point
 G_PODS, G_IN = 8, 16   # two-level composition of 128 nodes
+
+MEASURED_MIB = (0.25, 4.0)
+MEASURED_DEVICES = 8
 
 
 def grad_tree(net: str):
@@ -82,15 +103,16 @@ def _size(leaf) -> int:
     return math.prod(leaf.shape)
 
 
-def rows():
+def rows(backend: str = "lax"):
     out = []
     for net in ("vgg-a", "overfeat-fast"):
         leaves, leaf_layer = grad_tree(net)
         comps = layer_comps(net)
         total = sum(_size(lyr) for lyr in leaves) * SIZE_F32
         n_tensors = len(leaves)
-        out.append((f"comm/{net}/n_tensors", n_tensors, ""))
-        out.append((f"comm/{net}/grad_MiB", total / MIB, ""))
+        pre = f"comm/{net}/{backend}"
+        out.append((f"{pre}/n_tensors", n_tensors, ""))
+        out.append((f"{pre}/grad_MiB", total / MIB, ""))
         # the serialization granularity of each schedule is its largest
         # single message: the biggest tensor for per-tensor, the biggest
         # fusion buffer for bucketed plans
@@ -98,8 +120,8 @@ def rows():
         for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
             # per-tensor baseline: the seed schedule's collective count
             t0 = bucketed_allreduce_time(total, n_tensors, 0, G, hw,
-                                         fill_bytes=max_leaf)
-            out.append((f"comm/{net}/{tag}/per_tensor_ms", t0 * 1e3,
+                                         fill_bytes=max_leaf, backend=backend)
+            out.append((f"{pre}/{tag}/per_tensor_ms", t0 * 1e3,
                         f"n_coll={n_tensors};fill_MiB={max_leaf / MIB:.1f}"))
             for mib in SWEEP_MIB:
                 plan = plan_buckets(leaves, G, int(mib * MIB))
@@ -112,49 +134,147 @@ def rows():
                 t = bucketed_allreduce_time(total, n_tensors, mib * MIB,
                                             G, hw,
                                             n_coll=plan.n_collectives,
-                                            fill_bytes=fill)
-                out.append((f"comm/{net}/{tag}/bucket_{mib}MiB_ms", t * 1e3,
+                                            fill_bytes=fill, backend=backend)
+                out.append((f"{pre}/{tag}/bucket_{mib}MiB_ms", t * 1e3,
                             f"n_coll={plan.n_collectives};model={n_model}"))
                 # §3.1 overlap: exposed-comm with the bubble schedule over
                 # the SAME real plan vs. the monolithic (all-exposed) path
                 comm_times = [ring_collective_time(
-                    b.padded_size * SIZE_F32, G, hw) for b in plan.buckets]
+                    b.padded_size * SIZE_F32, G, hw, backend=backend)
+                    for b in plan.buckets]
                 off, on, _ = exposed_comm(plan, comm_times, comps, hw,
                                           leaf_layer=leaf_layer,
                                           efficiency=0.75)
                 hidden = 100.0 * (1.0 - on / off) if off > 0 else 0.0
                 out.append((
-                    f"comm/{net}/{tag}/overlap_{mib}MiB_exposed_ms",
+                    f"{pre}/{tag}/overlap_{mib}MiB_exposed_ms",
                     on * 1e3,
                     f"off={off * 1e3:.3f}ms;hidden={hidden:.0f}%"))
             # closed-form optimum (splittable-tensor model — the planner
             # rows above carry the real unsplittable-tensor counts)
             b_star = optimal_bucket_bytes(total, G, hw)
-            t_star = bucketed_allreduce_time(total, n_tensors, b_star, G, hw)
-            out.append((f"comm/{net}/{tag}/opt_bucket_MiB", b_star / MIB,
+            t_star = bucketed_allreduce_time(total, n_tensors, b_star, G, hw,
+                                             backend=backend)
+            out.append((f"{pre}/{tag}/opt_bucket_MiB", b_star / MIB,
                         f"closed_form_ms={t_star * 1e3:.3f}"))
-        # hierarchical vs flat at 128 nodes (8 pods x 16), 4 MiB buckets
+        # hierarchical vs flat at 128 nodes (8 pods x 16), 4 MiB buckets;
+        # the backend drives the flat ring / the in-pod stage, the
+        # cross-pod hop stays lax (make_schedule's default pairing)
         plan4 = plan_buckets(leaves, G_PODS * G_IN, 4 * MIB)
         fill4 = max(b.size for b in plan4.buckets) * SIZE_F32
         t_flat = bucketed_allreduce_time(total, n_tensors, 4 * MIB,
                                          G_PODS * G_IN, FDR,
                                          n_coll=plan4.n_collectives,
-                                         fill_bytes=fill4)
+                                         fill_bytes=fill4, backend=backend)
         t_hier = hierarchical_allreduce_time(total, n_tensors, 4 * MIB,
                                              G_IN, G_PODS, FDR,
                                              pod_bw=4 * FDR.link_bw,
                                              n_coll=plan4.n_collectives,
-                                             fill_bytes=fill4)
-        out.append((f"comm/{net}/hier128_flat_ms", t_flat * 1e3,
+                                             fill_bytes=fill4,
+                                             backend=backend)
+        out.append((f"{pre}/hier128_flat_ms", t_flat * 1e3,
                     f"ring={G_PODS * G_IN}"))
-        out.append((f"comm/{net}/hier128_two_level_ms", t_hier * 1e3,
+        out.append((f"{pre}/hier128_two_level_ms", t_hier * 1e3,
                     f"in_pod={G_IN};cross_pod={G_PODS}"))
     return out
 
 
-def main():
+# ---------------------------------------------------------------------------
+# measured: the real executable schedule on a forced host mesh
+# ---------------------------------------------------------------------------
+_MEASURE_SNIPPET = """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import AxisType, PartitionSpec as P
+
+    from repro.api import adapter_for
+    from repro.comm import make_schedule, pack_bucket, plan_buckets
+    from repro.configs import get_config, smoke_variant
+
+    BACKEND = {backend!r}
+    G = {devices}
+    cfg = smoke_variant(get_config("vgg-a"))
+    params = adapter_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    flat = tuple(jax.tree.leaves(params))
+    mesh = jax.make_mesh((G,), ("data",), axis_types=(AxisType.Auto,))
+    sched = make_schedule("data", backend=BACKEND)
+
+    for mib in {mibs}:
+        plan = plan_buckets(params, G, int(mib * 2**20))
+
+        def roundtrip(leaves):
+            bufs = [pack_bucket(leaves, b) for b in plan.buckets]
+            return [sched.broadcast(sched.reduce(buf) / G) for buf in bufs]
+
+        specs = jax.tree.map(lambda _: P(), flat)
+        fn = jax.jit(jax.shard_map(roundtrip, mesh=mesh, in_specs=(specs,),
+                                   out_specs=P(), check_vma=False))
+        with jax.set_mesh(mesh):
+            jax.block_until_ready(fn(flat))          # compile
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(flat))
+                best = min(best, time.perf_counter() - t0)
+        print(f"MEASURED mib={{mib}} ms={{best * 1e3:.4f}} "
+              f"n_coll={{plan.n_collectives}} "
+              f"bytes={{plan.total_padded * 4}}")
+"""
+
+
+def measured_rows(backend: str = "lax", devices: int = MEASURED_DEVICES):
+    """Wall-clock the real ``FlatSchedule(backend)`` bucket round-trip over
+    the vgg-a SMOKE tree on ``devices`` forced host devices (subprocess so
+    the forced device count never leaks into the caller), paired with the
+    §3.2 model's prediction for the same plan in the derived column."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=os.pathsep.join(
+            p for p in (os.path.join(os.path.dirname(__file__), "..", "src"),
+                        os.environ.get("PYTHONPATH")) if p))
+    code = "import repro.jaxcompat\n" + textwrap.dedent(
+        _MEASURE_SNIPPET.format(backend=backend, devices=devices,
+                                mibs=MEASURED_MIB))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"measure subprocess failed:\n{proc.stderr[-2000:]}")
+    out = []
+    for line in proc.stdout.splitlines():
+        m = re.match(r"MEASURED mib=([\d.]+) ms=([\d.]+) n_coll=(\d+) "
+                     r"bytes=(\d+)", line)
+        if not m:
+            continue
+        mib, ms, n_coll, nbytes = (float(m.group(1)), float(m.group(2)),
+                                   int(m.group(3)), int(m.group(4)))
+        pred = bucketed_allreduce_time(
+            nbytes, n_coll, mib * MIB, devices, FDR, n_coll=n_coll,
+            backend=backend)
+        out.append((f"comm/vgg-a-smoke/{backend}/measured_{mib}MiB_ms", ms,
+                    f"predicted_FDR_ms={pred * 1e3:.4f};n_coll={n_coll};"
+                    f"G={devices}"))
+    return out
+
+
+def main(argv=None):
+    import argparse
+
+    from repro.comm import COLLECTIVE_BACKENDS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="lax",
+                    choices=list(COLLECTIVE_BACKENDS))
+    ap.add_argument("--no-measured", action="store_true",
+                    help="skip the host-mesh wall-clock section "
+                         "(model-predicted rows only)")
+    args = ap.parse_args(argv)
     print(f"{'metric':48s} {'value':>12s}  derived")
-    for name, v, derived in rows():
+    all_rows = rows(args.backend)
+    if not args.no_measured:
+        all_rows += measured_rows(args.backend)
+    for name, v, derived in all_rows:
         print(f"{name:48s} {v:12.4f}  {derived}")
 
 

@@ -13,7 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, smoke_variant, XEON_E5_2698V3_FDR
+from repro.configs import XEON_E5_2698V3_FDR, get_config, smoke_variant
 from repro.core import balance
 from repro.models import cnn
 

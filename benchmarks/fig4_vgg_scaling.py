@@ -7,7 +7,7 @@ FC hybrid with optimal G) at the paper's node counts and print model vs
 paper.  Single-node training throughput anchor: ~30 img/s (paper Fig. 3)."""
 from __future__ import annotations
 
-from repro.configs import get_config, XEON_E5_2698V3_FDR
+from repro.configs import XEON_E5_2698V3_FDR, get_config
 from repro.configs.base import HardwareConfig
 from repro.core import balance
 

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from dataclasses import replace
 
-from repro.configs import get_config, XEON_E5_2666V3_10GBE
+from repro.configs import XEON_E5_2666V3_10GBE, get_config
 from repro.core import balance
 
 # 'enhanced networking' (SR-IOV + dedicated interrupt core): the paper cites

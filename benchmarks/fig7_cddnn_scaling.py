@@ -6,7 +6,7 @@ at 16 nodes.  All-FC networks are the worst case for data parallelism
 (§3.2), so this exercises the hybrid path with optimal G per layer."""
 from __future__ import annotations
 
-from repro.configs import get_config, XEON_E5_2697V3
+from repro.configs import XEON_E5_2697V3, get_config
 from repro.core import balance
 
 MB = 1024          # typical ASR minibatch (paper §3.2 mentions >5120 too)

@@ -82,8 +82,10 @@ def main() -> None:
     _section("Comm: bucket-size sweep (§3.2 latency model + repro.comm plan)")
     try:
         from benchmarks import comm_bucket_sweep
-        for name, v, derived in comm_bucket_sweep.rows():
-            _emit(name, float(v), derived)
+        from repro.comm import COLLECTIVE_BACKENDS
+        for backend in COLLECTIVE_BACKENDS:
+            for name, v, derived in comm_bucket_sweep.rows(backend):
+                _emit(name, float(v), derived)
     except Exception:
         traceback.print_exc()
         failures += 1

@@ -9,13 +9,15 @@ from __future__ import annotations
 
 import math
 
-from repro.configs import (
-    get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
-)
+from repro.configs import XEON_E5_2666V3_10GBE as GBE, XEON_E5_2698V3_FDR as FDR, get_config
 from repro.core import balance
 from repro.core.balance import (
-    SIZE_F32, LayerBalance, conv_comp_flops, data_parallel_comm_bytes,
-    max_data_parallel_nodes, optimal_bucket_bytes,
+    SIZE_F32,
+    LayerBalance,
+    conv_comp_flops,
+    data_parallel_comm_bytes,
+    max_data_parallel_nodes,
+    optimal_bucket_bytes,
 )
 
 PAPER = {

@@ -16,10 +16,13 @@ returns a ready :class:`Run`.  New model families plug in with
 ``make_distributed_update``) is unchanged underneath.
 """
 from repro.api.assemble import compile_run  # noqa: F401
-from repro.api.families import (  # noqa: F401
-    FamilyAdapter, adapter_for, families, register_family,
-)
+from repro.api.families import FamilyAdapter, adapter_for, families, register_family  # noqa: F401
 from repro.api.run import Run  # noqa: F401
 from repro.api.spec import (  # noqa: F401
-    MIB, MeshSpec, OPTIMIZERS, PARALLEL_MODES, RunSpec, SCHEDULES,
+    MIB,
+    OPTIMIZERS,
+    PARALLEL_MODES,
+    SCHEDULES,
+    MeshSpec,
+    RunSpec,
 )

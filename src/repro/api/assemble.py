@@ -11,8 +11,10 @@ Resolution order:
 4. parallelism mode -> update path: plain ``optimizer.update`` (serial/dp),
    the explicit bucketed §3.4 strip update of ``repro.comm`` (``zero1`` —
    monolithic post-grad reduction, or the §3.1 backprop-overlapped bubble
-   schedule when ``CommConfig.overlap`` is set), or GSPMD-sharded optimizer
-   state (``zero1-gspmd``);
+   schedule when ``CommConfig.overlap`` is set; either way the schedules
+   drive the collective backend named by ``CommConfig.backend`` — lax or
+   the explicit Pallas ring), or GSPMD-sharded optimizer state
+   (``zero1-gspmd``);
 5. ``make_train_step`` (or ``make_overlapped_train_step``) glues loss ->
    grads -> update into the jit-ready step the returned
    :class:`~repro.api.run.Run` carries.
@@ -37,9 +39,7 @@ from repro.core.sharding import ShardingCtx, ShardingRules
 from repro.launch.mesh import make_host_mesh
 from repro.optim import AdamW, MomentumSGD, constant, warmup_cosine
 from repro.optim.dist import make_distributed_update, make_overlapped_update
-from repro.train import (
-    make_overlapped_train_step, make_train_step, zero1_state_shardings,
-)
+from repro.train import make_overlapped_train_step, make_train_step, zero1_state_shardings
 
 
 def _resolve_config(spec: RunSpec):

@@ -20,13 +20,15 @@ from typing import Any, Callable, Dict, Iterator, Type
 
 import jax
 
-from repro.configs.base import (
-    CNNConfig, ConvLayerSpec, DNNConfig, ModelConfig,
-)
+from repro.configs.base import CNNConfig, ConvLayerSpec, DNNConfig, ModelConfig
 from repro.core.params import axes_tree
 from repro.core.sharding import ShardingCtx
 from repro.data.pipeline import (
-    asr_frame_stream, audio_stream, image_stream, lm_token_stream, vlm_stream,
+    asr_frame_stream,
+    audio_stream,
+    image_stream,
+    lm_token_stream,
+    vlm_stream,
 )
 from repro.models import cnn, dnn, transformer
 

@@ -18,10 +18,12 @@ Parallelism modes (the paper's §3/§4 composition points):
     gradients flow through the bucketed fusion-buffer collectives of
     ``repro.comm`` (``make_distributed_update`` under ``shard_map``) and each
     member updates only its 1/G strip.  ``comm`` carries bucket size, wire
-    dtype, the hierarchical two-level schedule, and ``overlap`` — the §3.1
+    dtype, the hierarchical two-level schedule, ``overlap`` — the §3.1
     bubble schedule that issues each bucket's part-reduce inside the
     backward pass (``make_overlapped_train_step``) instead of after
-    ``value_and_grad`` returns.
+    ``value_and_grad`` returns — and ``backend``, the collective
+    implementation the schedules drive (lax or the explicit Pallas ring;
+    ``repro.comm.backends``).
 ``zero1-gspmd``
     Same strip scheme through the compiler instead: optimizer state is
     sharded over the data axes (``zero1_state_shardings``) and XLA

@@ -40,22 +40,49 @@ knobs, all carried by :class:`~repro.comm.bucketer.CommConfig`:
     ``value_and_grad`` returns.  Only each transfer's "bubble" (the §3.1
     closed form, ``core.balance.bucket_bubble_schedule``) stays exposed.
 
+``backend`` (paper §3.4, the collective implementation)
+    Which wire implementation the schedules drive: ``"lax"`` (XLA's
+    collectives, the seed behavior) or ``"pallas-ring"`` (the paper's ring
+    explicitly — ``lax.ppermute`` neighbor exchange with the per-hop chunk
+    combine in a Pallas kernel).  Under the hierarchical schedule the
+    backend applies in-pod and the cross-pod hop stays on lax.  The
+    extension-point contract lives in :mod:`repro.comm.backends`.
+
 Layout: :mod:`repro.comm.bucketer` owns the static bucket plan and the
 pack/unpack of leaves into fusion buffers; :mod:`repro.comm.schedule` owns
 the collective schedules (flat and hierarchical) that run inside
-``jax.shard_map``; :mod:`repro.comm.overlap` owns the backprop-overlap
+``jax.shard_map``; :mod:`repro.comm.backends` owns the wire collectives
+those schedules drive; :mod:`repro.comm.overlap` owns the backprop-overlap
 hooks and the bucket→layer readiness metadata.  The consumers are
 ``optim.dist.make_distributed_update`` / ``make_overlapped_update`` and the
 explicit ZeRO-1 train steps (``train.make_train_step(dist_update=...)`` and
 ``train.make_overlapped_train_step``).
 """
+from repro.comm.backends import (  # noqa: F401
+    COLLECTIVE_BACKENDS,
+    CollectiveBackend,
+    LaxBackend,
+    PallasRingBackend,
+    get_backend,
+)
 from repro.comm.bucketer import (  # noqa: F401
-    Bucket, BucketPlan, CommConfig, LeafSlot, pack_bucket, plan_buckets,
+    Bucket,
+    BucketPlan,
+    CommConfig,
+    LeafSlot,
+    pack_bucket,
+    plan_buckets,
     unpack_buckets,
 )
 from repro.comm.overlap import (  # noqa: F401
-    bucket_triggers, exposed_comm, issue_order, make_overlap_grad,
+    bucket_triggers,
+    exposed_comm,
+    issue_order,
+    make_overlap_grad,
 )
 from repro.comm.schedule import (  # noqa: F401
-    FlatSchedule, HierarchicalSchedule, group_axes, make_schedule,
+    FlatSchedule,
+    HierarchicalSchedule,
+    group_axes,
+    make_schedule,
 )

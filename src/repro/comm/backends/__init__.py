@@ -1,0 +1,73 @@
+"""Pluggable collective backends — the extension point behind the schedule
+seam (``repro.comm.schedule``).
+
+A backend is one implementation of the paper's group collectives
+(part-reduce / part-broadcast / psum), called INSIDE ``jax.shard_map`` over
+a mesh axis or axis tuple.  The schedules (``FlatSchedule`` /
+``HierarchicalSchedule``) own everything else — bucket layout, wire-dtype
+casts, the two-level pod composition — so a new backend only has to honor
+the :class:`~repro.comm.backends.base.CollectiveBackend` contract:
+
+**Strip ownership.**  ``part_reduce`` splits the buffer into G equal chunks
+along ``dim`` and must deliver fully-reduced chunk i to the group member
+whose flat index (``core.collectives.flat_group_index`` — row-major over
+the axis tuple) is i.  ``part_broadcast`` is the exact inverse: chunks
+reassembled in owner order.  This is the ``lax.psum_scatter(tiled=True)``
+convention; the ZeRO-1 strip update slices params with the same index, so
+a backend with a different owner mapping would silently corrupt training —
+the equivalence tests (zero1 == serial per backend) pin it.
+
+**Wire-dtype semantics.**  Backends are dtype-transparent: they reduce in
+whatever dtype the schedule hands them (the "wire" arithmetic — a bf16
+reduce accumulates in bf16 on the wire) and never cast.  The schedule
+layer owns the fp32 accumulate after each stage and the always-fp32
+cross-pod hop and weight broadcast.
+
+**Shapes.**  The schedules only ever pass 1-D fusion buffers whose size is
+a multiple of the group (``bucketer`` pads every bucket); a backend may
+reject anything else with ``NotImplementedError`` (``PallasRingBackend``
+does; ``LaxBackend`` is shape-general).
+
+Selection is by name end-to-end: ``CommConfig(backend=...)`` →
+``make_schedule`` → here.  ``HierarchicalSchedule`` takes one backend per
+level, so e.g. the Pallas ring can run in-pod while the cross-pod hop
+stays on lax (the default pairing).  Adding a backend — host NCCL/Gloo,
+compressed wire formats — means one module here, a ``COLLECTIVE_BACKENDS``
+entry, and per-backend constants in ``core.balance.RING_BACKEND_MODELS``;
+every schedule, update builder, overlap hook, launcher flag and benchmark
+picks it up.
+
+Backends:
+
+``lax`` (:class:`LaxBackend`, the default)
+    ``jax.lax`` collectives — XLA's own ring/tree selection.  Bit-for-bit
+    the seed behavior; ``core.collectives`` is its internals.
+``pallas-ring`` (:class:`PallasRingBackend`)
+    The paper's §3.4 ring explicitly: ``lax.ppermute`` neighbor exchange
+    with the per-hop combine in a Pallas kernel (``kernels/ring.py``, whose
+    stacked form is oracle-validated in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.comm.backends.base import CollectiveBackend  # noqa: F401
+from repro.comm.backends.lax_backend import LaxBackend
+from repro.comm.backends.pallas_ring import PallasRingBackend
+
+COLLECTIVE_BACKENDS = ("lax", "pallas-ring")
+
+_FACTORIES = {"lax": LaxBackend, "pallas-ring": PallasRingBackend}
+
+
+def get_backend(backend: Union[str, CollectiveBackend]) -> CollectiveBackend:
+    """Resolve a backend name to an instance; instances pass through (so
+    callers can hand in a pre-configured or third-party backend)."""
+    if isinstance(backend, str):
+        try:
+            return _FACTORIES[backend]()
+        except KeyError:
+            raise ValueError(
+                f"unknown collective backend {backend!r}; "
+                f"known: {COLLECTIVE_BACKENDS}") from None
+    return backend

@@ -1,0 +1,47 @@
+"""The ``CollectiveBackend`` protocol — see the package docstring for the
+full contract (strip ownership, wire-dtype semantics, shard_map context)."""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+
+from repro.core.collectives import AxisNames
+
+
+@runtime_checkable
+class CollectiveBackend(Protocol):
+    """One implementation of the paper's three group collectives, called
+    INSIDE ``jax.shard_map`` over ``axis_name`` (a mesh axis or tuple).
+
+    name:            registry id (``COLLECTIVE_BACKENDS``); CLI-visible.
+    part_reduce:     reduce replicated-shape partials over the group,
+                     scatter per-member strips along ``dim`` — flat group
+                     member i (``collectives.flat_group_index``) receives
+                     fully-reduced chunk i.
+    part_broadcast:  exact inverse on strips — every member ends with the
+                     full tensor, chunks in owner order along ``dim``.
+    psum:            full all-reduce (``part_broadcast(part_reduce(x))``
+                     up to layout).  Not yet on a training hot path — the
+                     train steps' scalar loss/grad-norm reductions still
+                     call ``lax.psum`` directly; it completes the contract
+                     (equivalence tests pin it, and the async/stale-sync
+                     ROADMAP modes need a backend all-reduce).
+
+    All three operate on the dtype they are handed and return it unchanged
+    (wire-dtype casts live in ``repro.comm.schedule``).  A backend may
+    restrict ``dim``/rank to the schedules' canonical 1-D fusion-buffer
+    form — raise ``NotImplementedError`` for shapes outside its contract.
+    """
+    name: str
+
+    def part_reduce(self, x: jax.Array, axis_name: AxisNames,
+                    dim: int = 0) -> jax.Array:
+        ...
+
+    def part_broadcast(self, x: jax.Array, axis_name: AxisNames,
+                       dim: int = 0) -> jax.Array:
+        ...
+
+    def psum(self, x: jax.Array, axis_name: AxisNames) -> jax.Array:
+        ...

@@ -1,0 +1,30 @@
+"""The reference backend: ``jax.lax`` collectives (XLA picks the wire
+algorithm).  Reproduces the seed behavior bit-for-bit — it IS the seed
+path, with ``core.collectives`` as its internals."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax import lax
+
+from repro.core.collectives import AxisNames, part_broadcast, part_reduce
+
+
+@dataclass(frozen=True)
+class LaxBackend:
+    """``lax.psum_scatter`` / ``lax.all_gather`` / ``lax.psum`` — on TPU,
+    XLA lowers these to the same bidirectional ICI ring the §3.4 cost model
+    assumes (``core.balance.ring_collective_time(backend="lax")``)."""
+    name: str = "lax"
+
+    def part_reduce(self, x: jax.Array, axis_name: AxisNames,
+                    dim: int = 0) -> jax.Array:
+        return part_reduce(x, axis_name, dim)
+
+    def part_broadcast(self, x: jax.Array, axis_name: AxisNames,
+                       dim: int = 0) -> jax.Array:
+        return part_broadcast(x, axis_name, dim)
+
+    def psum(self, x: jax.Array, axis_name: AxisNames) -> jax.Array:
+        return lax.psum(x, axis_name)

@@ -1,0 +1,107 @@
+"""The paper's §3.4 ring, explicitly: neighbor exchange via ``lax.ppermute``
+(one hop to the right per step — XLA's ICI neighbor DMA on TPU) with the
+per-hop chunk combine in a Pallas kernel (``kernels.ring.ring_hop_accum``).
+
+Schedule (identical to the stacked ``kernels.ring`` kernels, whose
+interpret-mode validation pins it against the jnp oracles):
+
+    reduce-scatter   member p sends its local chunk (p-1)%G first; at step
+                     s it receives the partial of chunk (p-2-s)%G, adds its
+                     own contribution (the Pallas hop kernel) and forwards.
+                     After G-1 hops the fully-reduced chunk p sits on
+                     member p — the ``lax.psum_scatter(tiled=True)`` owner
+                     convention, so this backend and ``LaxBackend`` are
+                     drop-in interchangeable.
+    all-gather       member p's strip travels the ring; at step s the strip
+                     of owner (p-1-s)%G arrives and is placed (pure data
+                     movement — no kernel needed).
+
+Costs 2*(G-1) messages of ``size/G`` like the lax ring, but with the hop
+pipeline under kernel control: ``core.balance.RING_BACKEND_MODELS`` carries
+this backend's latency/bandwidth constants (lower per-message dispatch
+latency, a small per-hop rotation bubble) for the predicted-vs-measured
+rows of ``benchmarks/comm_bucket_sweep.py``.
+
+Operates on the schedules' canonical 1-D fusion buffers (``dim == 0``);
+buffer sizes are strip multiples by construction (``repro.comm.bucketer``
+pads every bucket to the group size).  On CPU the hop kernel runs in
+interpret mode (auto-detected), which is what the equivalence tests
+exercise.  The COMPILED Mosaic path (interpret=False, auto-selected on
+TPU) has not been exercised — this container is CPU-only — and chunk
+sizes here are arbitrary (padded_size/G), not lane-aligned; first TPU
+bring-up should expect to pad hop blocks to (8, 128) tiles (tracked in
+ROADMAP next to the remote-DMA ring).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import AxisNames, axis_size, flat_group_index, flatten_pad, unflatten
+from repro.kernels.ring import ring_hop_accum
+
+
+def _ring_perm(G: int) -> List[Tuple[int, int]]:
+    return [(i, (i + 1) % G) for i in range(G)]
+
+
+@dataclass(frozen=True)
+class PallasRingBackend:
+    """``interpret=None`` auto-selects Pallas interpret mode off-TPU."""
+    name: str = "pallas-ring"
+    interpret: Optional[bool] = None
+
+    def _check(self, x: jax.Array, dim: int) -> None:
+        if dim != 0 or x.ndim != 1:
+            raise NotImplementedError(
+                "PallasRingBackend implements the schedules' canonical 1-D "
+                f"fusion-buffer form (dim=0); got dim={dim}, "
+                f"shape={x.shape}. Flatten first (see collectives."
+                "flatten_pad) or use LaxBackend.")
+
+    def part_reduce(self, x: jax.Array, axis_name: AxisNames,
+                    dim: int = 0) -> jax.Array:
+        self._check(x, dim)
+        G = axis_size(axis_name)
+        if G == 1:
+            return x
+        if x.size % G:
+            raise ValueError(
+                f"buffer size {x.size} not a strip multiple of group {G}")
+        p = flat_group_index(axis_name)
+        chunks = x.reshape(G, x.size // G)
+        perm = _ring_perm(G)
+        send = chunks[jnp.mod(p - 1, G)]
+        for s in range(G - 1):
+            recv = lax.ppermute(send, axis_name, perm=perm)
+            c = jnp.mod(p - 2 - s, G)
+            send = ring_hop_accum(chunks, recv, c, interpret=self.interpret)
+        return send
+
+    def part_broadcast(self, x: jax.Array, axis_name: AxisNames,
+                       dim: int = 0) -> jax.Array:
+        self._check(x, dim)
+        G = axis_size(axis_name)
+        if G == 1:
+            return x
+        p = flat_group_index(axis_name)
+        perm = _ring_perm(G)
+        out = jnp.zeros((G, x.size), x.dtype).at[p].set(x)
+        send = x
+        for s in range(G - 1):
+            recv = lax.ppermute(send, axis_name, perm=perm)
+            out = out.at[jnp.mod(p - 1 - s, G)].set(recv)
+            send = recv
+        return out.reshape(G * x.size)
+
+    def psum(self, x: jax.Array, axis_name: AxisNames) -> jax.Array:
+        G = axis_size(axis_name)
+        if G == 1:
+            return x
+        flat = flatten_pad(x, G)
+        strips = self.part_reduce(flat, axis_name)
+        return unflatten(self.part_broadcast(strips, axis_name), x.shape)

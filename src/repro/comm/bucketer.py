@@ -40,16 +40,30 @@ class CommConfig:
                    materializes (the paper's §3.1 bubble schedule), instead
                    of reducing the whole tree after ``value_and_grad``
                    returns.  See :mod:`repro.comm.overlap`.
+    backend:       collective backend name (``repro.comm.backends``):
+                   ``"lax"`` (XLA collectives — the seed behavior) or
+                   ``"pallas-ring"`` (the paper's explicit §3.4 ring with
+                   the per-hop combine in a Pallas kernel).  Under the
+                   hierarchical schedule this drives the IN-POD level; the
+                   cross-pod hop stays on lax (see ``make_schedule``).
     """
     bucket_bytes: int = 4 * 2**20
     reduce_dtype: str = "float32"
     hierarchical: bool = False
     overlap: bool = False
+    backend: str = "lax"
 
     def __post_init__(self):
-        assert self.reduce_dtype in ("float32", "bfloat16"), (
-            f"reduce_dtype must be 'float32' or 'bfloat16', "
-            f"got {self.reduce_dtype!r}")
+        # real exceptions, not asserts: config validation must survive -O
+        if self.reduce_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"reduce_dtype must be 'float32' or 'bfloat16', "
+                f"got {self.reduce_dtype!r}")
+        from repro.comm.backends import COLLECTIVE_BACKENDS
+        if self.backend not in COLLECTIVE_BACKENDS:
+            raise ValueError(
+                f"backend must be one of {COLLECTIVE_BACKENDS}, "
+                f"got {self.backend!r}")
 
     @property
     def wire_dtype(self):

@@ -121,9 +121,10 @@ def make_overlap_grad(loss_fn: Callable, axes: AxisNames, comm: CommConfig,
     ``loss`` returned is still local — psum/G it for the global mean.
     ``g_strips`` is one fully-reduced fp32 mean-gradient strip per bucket of
     ``plan_buckets(params, G, comm.bucket_bytes)`` — the same plan (and the
-    same owner layout) ``make_overlapped_update`` consumes.
+    same owner layout) ``make_overlapped_update`` consumes.  The reduces
+    issued by the hooks go through ``comm.backend``'s collectives.
     """
-    sched = make_schedule(axes, comm.hierarchical)
+    sched = make_schedule(axes, comm.hierarchical, comm.backend)
 
     def overlap_grad(params, batch):
         plan = plan_buckets(params, G, comm.bucket_bytes)

@@ -8,10 +8,17 @@ the flat strip index the member owns — ``reduce`` scatters strip ``i`` to
 the member whose ``owner_index() == i``, and params must be sliced with the
 same index for the ZeRO-1 strip update to line up.
 
+The schedules are also the BACKEND seam: the actual wire collectives go
+through a :class:`~repro.comm.backends.CollectiveBackend` (``lax`` — the
+seed behavior — or ``pallas-ring``, the paper's explicit ring; see
+``repro.comm.backends``).  Schedules own bucket layout, wire-dtype casts
+and level composition; backends own the group collectives, so swapping one
+never touches the optimizer rewiring.
+
 FlatSchedule
-    One ring over the (possibly composed) group: ``psum_scatter`` /
-    ``all_gather`` over the axis tuple, exactly the seed per-tensor path but
-    per bucket.  Wire dtype applies to the single reduce stage.
+    One ring over the (possibly composed) group: backend part-reduce /
+    part-broadcast over the axis tuple, exactly the seed per-tensor path
+    but per bucket.  Wire dtype applies to the single reduce stage.
 
 HierarchicalSchedule (paper §3.3/§3.4 group composition)
     For ``axes == (outer, inner)`` — canonically ``("pod", "data")``: the
@@ -20,21 +27,22 @@ HierarchicalSchedule (paper §3.3/§3.4 group composition)
     the 1/G_in strips over ``outer`` in fp32 (fp32 accumulate across pods,
     strip bytes only on the slow link).  Member ``(p, d)`` owns flat strip
     ``d * G_out + p``; ``broadcast`` inverts with all-gathers in the
-    opposite order.
+    opposite order.  Each level takes its own backend — the intended
+    pairing is the Pallas ring in-pod (fast uniform links) with lax on the
+    cross-pod hop.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple, Union
+from dataclasses import dataclass, field
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh
 
-from repro.core.collectives import (
-    AxisNames, axis_size, part_broadcast, part_reduce,
-)
+from repro.comm.backends import CollectiveBackend, LaxBackend, get_backend
+from repro.core.collectives import AxisNames, axis_size, flat_group_index
 
 
 def group_axes(mesh: Mesh, data_axes) -> Tuple[Tuple[str, ...], AxisNames, int]:
@@ -51,39 +59,35 @@ def group_axes(mesh: Mesh, data_axes) -> Tuple[Tuple[str, ...], AxisNames, int]:
     return axes, axis_arg, G
 
 
-def _flat_index(axis_names: AxisNames) -> jax.Array:
-    if isinstance(axis_names, str):
-        return lax.axis_index(axis_names)
-    idx = jnp.zeros((), jnp.int32)
-    for a in axis_names:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
-    return idx
-
-
 @dataclass(frozen=True)
 class FlatSchedule:
     """Single-level ring over all data axes at once."""
     axes: AxisNames
+    backend: CollectiveBackend = field(default_factory=LaxBackend)
 
     def group_size(self) -> int:
         return axis_size(self.axes)
 
     def owner_index(self) -> jax.Array:
-        return _flat_index(self.axes)
+        return flat_group_index(self.axes)
 
     def reduce(self, buf: jax.Array, wire_dtype=jnp.float32) -> jax.Array:
-        strip = part_reduce(buf.astype(wire_dtype), self.axes, dim=0)
+        strip = self.backend.part_reduce(buf.astype(wire_dtype), self.axes,
+                                         dim=0)
         return strip.astype(jnp.float32)
 
     def broadcast(self, strip: jax.Array) -> jax.Array:
-        return part_broadcast(strip, self.axes, dim=0)
+        return self.backend.part_broadcast(strip, self.axes, dim=0)
 
 
 @dataclass(frozen=True)
 class HierarchicalSchedule:
-    """Two-level in-pod (``inner``) + cross-pod (``outer``) schedule."""
+    """Two-level in-pod (``inner``) + cross-pod (``outer``) schedule, with
+    a backend per level."""
     outer: str
     inner: str
+    inner_backend: CollectiveBackend = field(default_factory=LaxBackend)
+    outer_backend: CollectiveBackend = field(default_factory=LaxBackend)
 
     def group_size(self) -> int:
         return lax.axis_size(self.outer) * lax.axis_size(self.inner)
@@ -95,23 +99,48 @@ class HierarchicalSchedule:
                 + lax.axis_index(self.outer))
 
     def reduce(self, buf: jax.Array, wire_dtype=jnp.float32) -> jax.Array:
-        in_pod = part_reduce(buf.astype(wire_dtype), self.inner, dim=0)
+        in_pod = self.inner_backend.part_reduce(buf.astype(wire_dtype),
+                                                self.inner, dim=0)
         # cross-pod hop: strip bytes only, always fp32 accumulate
-        return part_reduce(in_pod.astype(jnp.float32), self.outer, dim=0)
+        return self.outer_backend.part_reduce(in_pod.astype(jnp.float32),
+                                              self.outer, dim=0)
 
     def broadcast(self, strip: jax.Array) -> jax.Array:
-        in_pod = part_broadcast(strip, self.outer, dim=0)
-        return part_broadcast(in_pod, self.inner, dim=0)
+        in_pod = self.outer_backend.part_broadcast(strip, self.outer, dim=0)
+        return self.inner_backend.part_broadcast(in_pod, self.inner, dim=0)
 
 
 Schedule = Union[FlatSchedule, HierarchicalSchedule]
 
 
 def make_schedule(axes: Union[str, Tuple[str, ...]],
-                  hierarchical: bool = False) -> Schedule:
-    """Pick the schedule for ``axes``.  The hierarchical form needs exactly
-    two axes ``(outer, inner)``; anything else falls back to the flat ring
-    (a one-axis "hierarchy" IS the flat ring)."""
+                  hierarchical: bool = False,
+                  backend: Union[str, CollectiveBackend] = "lax",
+                  cross_backend: Union[str, CollectiveBackend, None] = None,
+                  ) -> Schedule:
+    """Pick the schedule for ``axes`` and bind its backend(s).
+
+    The hierarchical form needs exactly two axes ``(outer, inner)``; one
+    axis degrades to the flat ring (a one-axis "hierarchy" IS the flat
+    ring), and more than two is a config error — there is no defined
+    composition order, so it raises instead of silently going flat.
+
+    ``backend`` drives the flat ring, or the IN-POD level of the
+    hierarchical schedule.  ``cross_backend`` sets the cross-pod hop and
+    defaults to ``"lax"``: the hop crosses the slow inter-pod link where
+    XLA's collective is the right tool (and an in-kernel ring buys
+    nothing), which is the mixed pairing the backends package documents.
+    """
+    if hierarchical and not isinstance(axes, str) and len(axes) > 2:
+        raise ValueError(
+            "hierarchical schedule composes exactly two axes "
+            f"(outer, inner); got {len(axes)}: {axes}. Fold the extra axes "
+            "into the mesh topology (e.g. one 'pod' x one 'data' axis) or "
+            "use hierarchical=False for a single flat ring.")
     if hierarchical and not isinstance(axes, str) and len(axes) == 2:
-        return HierarchicalSchedule(outer=axes[0], inner=axes[1])
-    return FlatSchedule(axes=axes)
+        return HierarchicalSchedule(
+            outer=axes[0], inner=axes[1],
+            inner_backend=get_backend(backend),
+            outer_backend=get_backend(
+                "lax" if cross_backend is None else cross_backend))
+    return FlatSchedule(axes=axes, backend=get_backend(backend))

@@ -1,9 +1,21 @@
 from repro.configs.base import (  # noqa: F401
-    ModelConfig, CNNConfig, DNNConfig, ConvLayerSpec, InputShape, INPUT_SHAPES,
-    HardwareConfig, TPU_V5E, XEON_E5_2698V3_FDR, XEON_E5_2666V3_10GBE,
+    INPUT_SHAPES,
+    TPU_V5E,
+    XEON_E5_2666V3_10GBE,
     XEON_E5_2697V3,
+    XEON_E5_2698V3_FDR,
+    CNNConfig,
+    ConvLayerSpec,
+    DNNConfig,
+    HardwareConfig,
+    InputShape,
+    ModelConfig,
 )
 from repro.configs.registry import (  # noqa: F401
-    get_config, get_input_shape, smoke_variant, ALL_ARCHS, ASSIGNED_ARCHS,
+    ALL_ARCHS,
+    ASSIGNED_ARCHS,
     PAPER_ARCHS,
+    get_config,
+    get_input_shape,
+    smoke_variant,
 )

@@ -4,7 +4,7 @@
 vocab 256000.  Alternating local (sliding-window 4096) / global attention,
 attention-logit softcap 50, final-logit softcap 30, tied embeddings.
 """
-from repro.configs.base import ModelConfig, ATTN_LOCAL, ATTN_GLOBAL
+from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="gemma2-2b",

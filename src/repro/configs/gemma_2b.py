@@ -3,7 +3,7 @@
 18 layers, d_model 2048, 8 heads with MQA (kv=1, head_dim 256), d_ff 16384
 (GeGLU), vocab 256000, tied embeddings.
 """
-from repro.configs.base import ModelConfig, ATTN_GLOBAL
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="gemma-2b",

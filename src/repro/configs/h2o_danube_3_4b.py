@@ -4,7 +4,7 @@
 (SwiGLU), vocab 32000.  Llama+Mistral mix with sliding-window attention
 (window 4096) — runs long_500k natively (bounded KV cache).
 """
-from repro.configs.base import ModelConfig, ATTN_LOCAL
+from repro.configs.base import ATTN_LOCAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="h2o-danube-3-4b",

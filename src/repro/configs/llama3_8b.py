@@ -3,7 +3,7 @@
 32 layers, d_model 4096, 32 heads (GQA kv=8, head_dim 128), d_ff 14336
 (SwiGLU), vocab 128256, rope theta 500000, untied embeddings.
 """
-from repro.configs.base import ModelConfig, ATTN_GLOBAL
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="llama3-8b",

@@ -1,7 +1,7 @@
 """llama-100m — a ~100M-parameter LLaMA-family config for the end-to-end
 training example (examples/train_lm_100m.py).  Same block structure as
 llama3-8b, scaled to laptop/CPU size [arXiv:2407.21783 lineage]."""
-from repro.configs.base import ModelConfig, ATTN_GLOBAL
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="llama-100m",

@@ -6,7 +6,7 @@ MoE: 8 experts, top-2, expert d_ff 16384 (SwiGLU).  Sliding-window attention
 the arch where the paper's strip-sharded optimizer state (ZeRO-1 via
 part-reduce/part-broadcast) and FSDP weight sharding matter most; fsdp=True.
 """
-from repro.configs.base import ModelConfig, ATTN_LOCAL
+from repro.configs.base import ATTN_LOCAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="mixtral-8x22b",

@@ -7,7 +7,7 @@ The EnCodec conv codec is a STUB (`frontends.AudioStub`): input_specs supply
 48-layer decoder-only transformer over those frames is real, with 4 parallel
 codebook heads on the output.
 """
-from repro.configs.base import ModelConfig, ATTN_GLOBAL
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="musicgen-medium",

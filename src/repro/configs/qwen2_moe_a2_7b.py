@@ -4,7 +4,7 @@
 MoE: 60 routed experts (top-4, expert d_ff 1408) + 4 shared experts
 (fused shared-expert hidden 4*1408 = 5632) on every layer.
 """
-from repro.configs.base import ModelConfig, ATTN_GLOBAL
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="qwen2-moe-a2.7b",

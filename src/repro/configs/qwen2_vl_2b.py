@@ -6,7 +6,7 @@ dynamic-resolution vision input.  The ViT/projector frontend is a STUB
 (`frontends.VisionStub`): input_specs supply (B, vision_tokens, d_model)
 patch embeddings; the language decoder + M-RoPE + interleave are real.
 """
-from repro.configs.base import ModelConfig, ATTN_GLOBAL
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
 
 CONFIG = ModelConfig(
     name="qwen2-vl-2b",

@@ -4,9 +4,7 @@ from __future__ import annotations
 import importlib
 from typing import Union
 
-from repro.configs.base import (
-    ModelConfig, CNNConfig, DNNConfig, InputShape, INPUT_SHAPES,
-)
+from repro.configs.base import INPUT_SHAPES, CNNConfig, DNNConfig, InputShape, ModelConfig
 
 # assigned pool (10) + the paper's own workloads (3)
 _MODULES = {

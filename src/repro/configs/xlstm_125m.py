@@ -5,7 +5,7 @@ xLSTM blocks carry their own up/down projections, expand 2).  Alternating
 mLSTM (matrix memory) / sLSTM (scalar memory) blocks — an xLSTM[1:1]-style
 stack.
 """
-from repro.configs.base import ModelConfig, BLOCK_MLSTM, BLOCK_SLSTM
+from repro.configs.base import BLOCK_MLSTM, BLOCK_SLSTM, ModelConfig
 
 CONFIG = ModelConfig(
     name="xlstm-125m",

@@ -8,7 +8,7 @@ weights at every interleave point; we reproduce that weight sharing via the
 scan-over-pattern carry (the shared block's params are passed as a broadcast
 argument, not stacked).
 """
-from repro.configs.base import ModelConfig, BLOCK_MAMBA, BLOCK_SHARED_ATTN
+from repro.configs.base import BLOCK_MAMBA, BLOCK_SHARED_ATTN, ModelConfig
 
 CONFIG = ModelConfig(
     name="zamba2-2.7b",

@@ -3,5 +3,11 @@ blocking solver (§2.2), part-reduce/part-broadcast primitives (§3.4), the
 hybrid-parallel planner (§3.3), logical-axis sharding, and the roofline
 analyzer used by the dry-run."""
 from repro.core import (  # noqa: F401
-    balance, blocking, collectives, hybrid, params, roofline, sharding,
+    balance,
+    blocking,
+    collectives,
+    hybrid,
+    params,
+    roofline,
+    sharding,
 )

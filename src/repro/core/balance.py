@@ -277,6 +277,47 @@ def hybrid_comm_at_optimum(ifm: int, ofm: int, minibatch: int, N: int,
 # Bucketing (repro.comm) amortizes SWlat over bucket_bytes; these closed
 # forms predict the collective count and the optimal bucket size that
 # benchmarks/table1_balance.py and the comm sweep report.
+
+
+@dataclass(frozen=True)
+class RingBackendModel:
+    """How a collective backend (repro.comm.backends) shifts the §3.2 comm
+    constants: per-message software latency scales by ``latency_scale`` and
+    the achieved link bandwidth is ``bw_efficiency * hw.link_bw``."""
+    latency_scale: float
+    bw_efficiency: float
+
+
+# Per-backend constants for the ring cost model.  "lax" is the calibration
+# baseline (1, 1): hw tables already describe the stock XLA collectives.
+# "pallas-ring" is the hand-scheduled ring of kernels/ring.py: issuing each
+# hop's neighbor copy straight from the kernel skips the per-collective
+# dispatch/fusion barrier (~half the per-message SWlat), while the
+# double-buffered chunk rotation exposes one chunk of pipeline fill per
+# direction (~95% of link bandwidth).  Provisional until the runtime
+# autotuning feedback loop (ROADMAP) replaces them with measured values —
+# benchmarks/comm_bucket_sweep.py reports predicted-vs-measured per backend.
+RING_BACKEND_MODELS = {
+    "lax": RingBackendModel(latency_scale=1.0, bw_efficiency=1.0),
+    "pallas-ring": RingBackendModel(latency_scale=0.5, bw_efficiency=0.95),
+}
+
+
+def backend_hw(hw: HardwareConfig, backend: str) -> HardwareConfig:
+    """``hw`` with the backend's latency/bandwidth constants applied —
+    the one place backend names enter the §3.2 closed forms."""
+    if backend not in RING_BACKEND_MODELS:
+        raise ValueError(f"unknown collective backend {backend!r}; "
+                         f"known: {tuple(RING_BACKEND_MODELS)}")
+    m = RING_BACKEND_MODELS[backend]
+    if m.latency_scale == 1.0 and m.bw_efficiency == 1.0:
+        return hw
+    return dataclasses.replace(
+        hw, name=f"{hw.name}+{backend}",
+        sw_latency=hw.sw_latency * m.latency_scale,
+        link_bw=hw.link_bw * m.bw_efficiency)
+
+
 def collective_count(total_bytes: float, n_tensors: int,
                      bucket_bytes: float) -> int:
     """Part-reduce/part-broadcast pairs per step: O(#tensors) without
@@ -286,12 +327,15 @@ def collective_count(total_bytes: float, n_tensors: int,
     return max(1, math.ceil(total_bytes / bucket_bytes))
 
 
-def ring_collective_time(nbytes: float, G: int, hw: HardwareConfig) -> float:
+def ring_collective_time(nbytes: float, G: int, hw: HardwareConfig,
+                         backend: str = "lax") -> float:
     """One reduce-scatter + all-gather pair on a G-member ring:
     2*(G-1) messages of nbytes/G each (bandwidth-optimal decomposition,
-    see collectives.part_reduce_broadcast) + per-message SWlat."""
+    see collectives.part_reduce_broadcast) + per-message SWlat.  ``backend``
+    applies the per-implementation constants (``RING_BACKEND_MODELS``)."""
     if G <= 1:
         return 0.0
+    hw = backend_hw(hw, backend)
     return 2.0 * (G - 1) * (hw.sw_latency + (nbytes / G) / hw.link_bw)
 
 
@@ -299,7 +343,8 @@ def bucketed_allreduce_time(total_bytes: float, n_tensors: int,
                             bucket_bytes: float, G: int,
                             hw: HardwareConfig,
                             n_coll: int = 0,
-                            fill_bytes: float = 0.0) -> float:
+                            fill_bytes: float = 0.0,
+                            backend: str = "lax") -> float:
     """Gradient round-trip time with fusion buffers:
         n_coll * 2*(G-1)*SWlat            (latency, amortized by bucketing)
       + 2*(G-1)/G * total_bytes / BW      (bandwidth, bucket-independent)
@@ -315,9 +360,11 @@ def bucketed_allreduce_time(total_bytes: float, n_tensors: int,
     splits one, so a tree dominated by a few huge tensors issues far fewer
     collectives than ceil(total/bucket).  ``fill_bytes`` likewise overrides
     the default average-message estimate (total/n_coll) with the largest
-    real message when the caller knows it."""
+    real message when the caller knows it.  ``backend`` applies the
+    per-implementation ring constants (``RING_BACKEND_MODELS``)."""
     if G <= 1:
         return 0.0
+    hw = backend_hw(hw, backend)
     if n_coll <= 0:
         n_coll = collective_count(total_bytes, n_tensors, bucket_bytes)
     if fill_bytes <= 0:
@@ -344,7 +391,9 @@ def hierarchical_allreduce_time(total_bytes: float, n_tensors: int,
                                 hw: HardwareConfig,
                                 pod_bw: float = 0.0,
                                 n_coll: int = 0,
-                                fill_bytes: float = 0.0) -> float:
+                                fill_bytes: float = 0.0,
+                                backend: str = "lax",
+                                cross_backend: str = "lax") -> float:
     """Two-level schedule (repro.comm.HierarchicalSchedule): bucketed
     reduce-scatter + all-gather in-pod over ``g_in`` members at the fast
     in-pod bandwidth ``pod_bw`` (defaults to hw.link_bw), plus the cross-pod
@@ -353,18 +402,21 @@ def hierarchical_allreduce_time(total_bytes: float, n_tensors: int,
 
     Both stages issue ONE collective per bucket (the cross-pod hop reduces
     each bucket's strip, it does not re-bucket it), so a single collective
-    count applies to both; ``n_coll`` overrides it with the real planner's."""
+    count applies to both; ``n_coll`` overrides it with the real planner's.
+    ``backend`` applies to the in-pod stage and ``cross_backend`` to the
+    cross-pod hop — mirroring ``make_schedule``'s per-level backends."""
     if n_coll <= 0:
         n_coll = collective_count(total_bytes, n_tensors, bucket_bytes)
     pod_hw = hw if pod_bw <= 0 else dataclasses.replace(
         hw, name=hw.name + "+pod", link_bw=pod_bw)
     t_in = bucketed_allreduce_time(total_bytes, n_tensors, bucket_bytes,
                                    g_in, pod_hw, n_coll=n_coll,
-                                   fill_bytes=fill_bytes)
+                                   fill_bytes=fill_bytes, backend=backend)
     strip_bytes = total_bytes / max(g_in, 1)
     t_out = bucketed_allreduce_time(strip_bytes, n_tensors, bucket_bytes,
                                     g_out, hw, n_coll=n_coll,
-                                    fill_bytes=fill_bytes / max(g_in, 1))
+                                    fill_bytes=fill_bytes / max(g_in, 1),
+                                    backend=cross_backend)
     return t_in + t_out
 
 

@@ -15,6 +15,13 @@ These run inside ``jax.shard_map``; axis_name may be a single mesh axis or a
 tuple (e.g. ("pod", "data") for the multi-pod gradient reduction — the
 cross-pod hop composes with the in-pod ring exactly as the paper composes
 groups).
+
+These functions are the internals of ``repro.comm.backends.LaxBackend`` —
+the reference :class:`~repro.comm.backends.CollectiveBackend` every other
+implementation (e.g. the Pallas ring of ``backends.pallas_ring``) must
+match: same strip ownership (flat group member i owns chunk i along the
+scatter dim) and same wire-dtype semantics (collectives run on whatever
+dtype they are handed; casts belong to the schedule layer).
 """
 from __future__ import annotations
 
@@ -34,6 +41,19 @@ def axis_size(axis_name: AxisNames) -> int:
     for a in axis_name:
         n *= lax.axis_size(a)
     return n
+
+
+def flat_group_index(axis_name: AxisNames) -> jax.Array:
+    """This member's flat index in the (possibly composed) group: row-major
+    over the axis tuple, matching how ``lax.psum_scatter``/``lax.ppermute``
+    linearize a multi-axis group — THE strip-owner convention every
+    collective backend must share."""
+    if isinstance(axis_name, str):
+        return lax.axis_index(axis_name)
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_name:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
 
 
 def part_reduce(x: jax.Array, axis_name: AxisNames, dim: int = 0) -> jax.Array:

@@ -17,7 +17,7 @@ from typing import Tuple
 
 from jax.sharding import Mesh
 
-from repro.configs.base import ModelConfig, InputShape, HardwareConfig
+from repro.configs.base import HardwareConfig, InputShape, ModelConfig
 from repro.core import balance
 from repro.core.sharding import ShardingRules
 

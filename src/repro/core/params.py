@@ -10,9 +10,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass(frozen=True)

@@ -24,7 +24,7 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict
 
-from repro.configs.base import HardwareConfig, TPU_V5E
+from repro.configs.base import TPU_V5E, HardwareConfig
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

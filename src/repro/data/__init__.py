@@ -1,4 +1,10 @@
 from repro.data.pipeline import (  # noqa: F401
-    Prefetcher, make_placer, stream_for, lm_token_stream, image_stream,
-    asr_frame_stream, vlm_stream, audio_stream,
+    Prefetcher,
+    asr_frame_stream,
+    audio_stream,
+    image_stream,
+    lm_token_stream,
+    make_placer,
+    stream_for,
+    vlm_stream,
 )

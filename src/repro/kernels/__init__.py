@@ -7,3 +7,4 @@ from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.blocked_matmul import blocked_matmul  # noqa: F401
 from repro.kernels.conv2d import conv2d_nhwc  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.ring import ring_all_gather, ring_hop_accum, ring_reduce_scatter  # noqa: F401

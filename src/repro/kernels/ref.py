@@ -71,6 +71,23 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.astype(out_dtype or q.dtype)
 
 
+def ring_reduce_scatter_ref(stacked: jax.Array) -> jax.Array:
+    """Oracle for ``kernels.ring.ring_reduce_scatter``: row p of the result
+    is the sum over members of chunk p (f32 accumulation; the ring kernel
+    accumulates hop-by-hop in the wire dtype, so bf16 compares to
+    tolerance)."""
+    G, N = stacked.shape
+    full = stacked.astype(jnp.float32).sum(axis=0)
+    return full.reshape(G, N // G).astype(stacked.dtype)
+
+
+def ring_all_gather_ref(strips: jax.Array) -> jax.Array:
+    """Oracle for ``kernels.ring.ring_all_gather``: every member ends up
+    with the full buffer — strips concatenated in owner order."""
+    G, n = strips.shape
+    return jnp.broadcast_to(strips.reshape(1, G * n), (G, G * n))
+
+
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          cache_len, *, window: int = 0,
                          logit_softcap: float = 0.0) -> jax.Array:

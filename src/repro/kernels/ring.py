@@ -1,0 +1,186 @@
+"""Paper §3.4 ring collectives as Pallas kernels.
+
+The paper's part-reduce / part-broadcast pair is bandwidth-optimal when run
+as a RING: each of the G members repeatedly sends one 1/G chunk to its right
+neighbor and combines the chunk it receives from the left — G-1 neighbor
+exchanges move 2*(G-1)/G of the buffer per member (``core.balance.
+ring_collective_time``).  This module implements that schedule explicitly:
+
+``ring_reduce_scatter`` / ``ring_all_gather``
+    The full §3.4 ring over a stacked ``(G, N)`` buffer (member p's partial
+    in row p) in ONE kernel: grid ``(G-1 steps, G members)``, executed in
+    step-major order, with a double-buffered mailbox ``(2, G, chunk)``
+    standing in for the neighbor RDMA slots — program ``(s, p)`` writes the
+    chunk it "sends" into the slot program ``(s+1, p+1)`` reads, alternating
+    buffer parity per step exactly like the double-buffered remote-copy ring
+    of the Pallas TPU guide (send/recv slot = step % 2).  On a real slice
+    the same schedule runs one program per chip with
+    ``pltpu.make_async_remote_copy`` to the right neighbor; the stacked
+    single-core form keeps the rotation/parity logic identical and runs
+    under ``interpret=True`` on CPU, where it is validated against the
+    ``kernels.ref`` oracles (tests/test_kernels.py).
+
+``ring_hop_accum``
+    The per-hop combine of the distributed ring — ``recv + chunks[c]`` with
+    the chunk index prefetched as a scalar — used by
+    ``repro.comm.backends.PallasRingBackend`` inside ``shard_map``: there
+    the neighbor exchange itself is a ``lax.ppermute`` (XLA's ICI neighbor
+    DMA), and this kernel is the compute the ring overlaps with it.
+
+Chunk/owner convention (must match ``lax.psum_scatter(tiled=True)`` so the
+backends are interchangeable): the buffer splits into G equal chunks along
+dim 0 and flat group member i ends up owning chunk i.  At step s, member p
+receives the partial sum of chunk ``(p - 2 - s) % G``, adds its own
+contribution, and forwards it — after G-1 hops the fully-reduced chunk p
+lands on member p.  All-gather inverts it: member p's strip visits every
+member in G-1 hops, arriving at member p+k as chunk ``(p) = ((p+k) - k)``.
+
+Accumulation happens in the input dtype: the ring's hop-adds ARE the wire
+arithmetic, so a bf16 wire dtype accumulates in bf16 per hop (the schedule
+layer casts back to fp32 after the reduce, and the cross-pod hop of the
+hierarchical schedule always runs fp32 — see ``repro.comm.schedule``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# the full §3.4 ring, one kernel (stacked single-core form)
+# ---------------------------------------------------------------------------
+def _reduce_scatter_kernel(x_ref, out_ref, buf_ref):
+    """Program (s, p): member p's step-s hop of the ring reduce-scatter.
+
+    x_ref    (G, G, n)  member p's local partials, split into G chunks
+    out_ref  (G, n)     member p's fully-reduced strip (written at s=G-2)
+    buf_ref  (2, G, n)  double-buffered mailboxes: slot ``(s+1) % 2, q`` is
+                        what q's left neighbor sent it for step s+1
+    """
+    s, p = pl.program_id(0), pl.program_id(1)
+    G = pl.num_programs(1)
+    steps = pl.num_programs(0)
+    c = jnp.mod(p - 2 - s, G)       # chunk whose partial arrives this step
+    left = jnp.mod(p - 1, G)
+    recv = jax.lax.cond(
+        s == 0,
+        # first hop: the left neighbor sends its RAW local chunk
+        lambda: x_ref[left, c],
+        lambda: buf_ref[jnp.mod(s, 2), p])
+    acc = recv + x_ref[p, c]
+    # "send" to the right neighbor: the mailbox it reads at step s+1
+    buf_ref[jnp.mod(s + 1, 2), jnp.mod(p + 1, G)] = acc
+
+    @pl.when(s == steps - 1)
+    def _():
+        out_ref[p] = acc            # c == p at the final step
+
+
+def _all_gather_kernel(x_ref, out_ref, buf_ref):
+    """Program (s, p): member p's step-s hop of the ring all-gather.
+
+    x_ref    (G, n)     member p's strip in row p
+    out_ref  (G, G, n)  row p = member p's gathered copy, chunk o = strip o
+    buf_ref  (2, G, n)  double-buffered mailboxes (parity = step % 2)
+    """
+    s, p = pl.program_id(0), pl.program_id(1)
+    G = pl.num_programs(1)
+    o = jnp.mod(p - 1 - s, G)       # owner of the strip arriving this step
+    left = jnp.mod(p - 1, G)
+
+    @pl.when(s == 0)
+    def _():
+        out_ref[p, p] = x_ref[p]    # own strip needs no hop
+
+    recv = jax.lax.cond(
+        s == 0,
+        lambda: x_ref[left],
+        lambda: buf_ref[jnp.mod(s, 2), p])
+    out_ref[p, o] = recv
+    buf_ref[jnp.mod(s + 1, 2), jnp.mod(p + 1, G)] = recv
+
+
+def ring_reduce_scatter(stacked: jax.Array, *,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Reduce-scatter a stacked ``(G, N)`` buffer of per-member partials:
+    row p of the ``(G, N // G)`` result is the fully-reduced chunk p —
+    member p's strip under the §3.4 owner convention.  ``N % G == 0``
+    (fusion buckets are padded to a strip multiple by ``repro.comm``)."""
+    G, N = stacked.shape
+    if N % G:
+        raise ValueError(f"buffer size {N} not divisible by group {G}")
+    n = N // G
+    if G == 1:
+        return stacked.reshape(1, N)
+    out, _ = pl.pallas_call(
+        _reduce_scatter_kernel,
+        grid=(G - 1, G),
+        out_shape=(jax.ShapeDtypeStruct((G, n), stacked.dtype),
+                   jax.ShapeDtypeStruct((2, G, n), stacked.dtype)),
+        interpret=_auto_interpret(interpret),
+    )(stacked.reshape(G, G, n))
+    return out
+
+
+def ring_all_gather(strips: jax.Array, *,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """All-gather per-member ``(G, n)`` strips into ``(G, G * n)``: every
+    row is the full buffer, strips concatenated in owner order (the §3.4
+    part-broadcast)."""
+    G, n = strips.shape
+    if G == 1:
+        return strips
+    out, _ = pl.pallas_call(
+        _all_gather_kernel,
+        grid=(G - 1, G),
+        out_shape=(jax.ShapeDtypeStruct((G, G, n), strips.dtype),
+                   jax.ShapeDtypeStruct((2, G, n), strips.dtype)),
+        interpret=_auto_interpret(interpret),
+    )(strips)
+    return out.reshape(G, G * n)
+
+
+# ---------------------------------------------------------------------------
+# the per-hop combine of the distributed ring (used inside shard_map)
+# ---------------------------------------------------------------------------
+def _hop_accum_kernel(c_ref, chunk_ref, recv_ref, out_ref):
+    # chunk_ref is the (1, n) block the index map selected with the
+    # prefetched chunk index — the rest of the local buffer never moves
+    out_ref[...] = recv_ref[...] + chunk_ref[0]
+
+
+def ring_hop_accum(chunks: jax.Array, recv: jax.Array, c: jax.Array, *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """One ring hop: add this member's local partial of chunk ``c`` (a
+    traced index — it depends on ``lax.axis_index``) to the partial just
+    received from the left neighbor.  ``chunks`` is ``(G, n)``, ``recv``
+    and the result are ``(n,)``.
+
+    ``c`` rides in as a scalar-prefetch argument driving the chunks
+    BlockSpec index map, so only the selected ``(1, n)`` block is brought
+    into VMEM per hop — O(n) traffic, not O(G*n) (the G-1 hops of one
+    reduce would otherwise stream the whole buffer G-1 times)."""
+    from jax.experimental.pallas import tpu as pltpu
+    G, n = chunks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i, c_ref: (c_ref[0], 0)),
+                  pl.BlockSpec((n,), lambda i, c_ref: (0,))],
+        out_specs=pl.BlockSpec((n,), lambda i, c_ref: (0,)),
+    )
+    return pl.pallas_call(
+        _hop_accum_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(recv.shape, recv.dtype),
+        interpret=_auto_interpret(interpret),
+    )(jnp.asarray(c, jnp.int32).reshape(1), chunks, recv)

@@ -13,8 +13,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.api.families import adapter_for
 from repro.configs import (
-    ModelConfig, TPU_V5E, get_config, get_input_shape, ASSIGNED_ARCHS,
+    ASSIGNED_ARCHS,
     INPUT_SHAPES,
+    TPU_V5E,
+    ModelConfig,
+    get_config,
+    get_input_shape,
 )
 from repro.core import hybrid, roofline
 from repro.core.roofline import parse_collectives

@@ -9,7 +9,7 @@ import time
 
 import jax
 
-from repro.configs import get_config, smoke_variant, ASSIGNED_ARCHS
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_variant
 from repro.core.sharding import ShardingCtx
 from repro.models import transformer
 from repro.serve import generate

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.configs.base import ModelConfig, InputShape
+from repro.configs.base import InputShape, ModelConfig
 from repro.core.params import Spec
 from repro.core.sharding import ShardingRules
 from repro.models import transformer

@@ -9,6 +9,10 @@ mesh, placement, update-path selection), and ``Run.fit`` trains.
     python -m repro.launch.train --arch vgg-a --smoke \\
         --parallel zero1 --bucket-mb 4 --wire-dtype bf16 --overlap
 
+    # same, on the explicit Pallas ring collectives instead of lax
+    python -m repro.launch.train --arch vgg-a --smoke \\
+        --parallel zero1 --comm-backend pallas-ring
+
 A ``--ckpt-dir`` run periodically checkpoints AND auto-resumes: relaunching
 the same command picks up from the latest saved step (params, optimizer
 strips and data-stream position), not from step 0.
@@ -20,8 +24,8 @@ from __future__ import annotations
 
 import argparse
 
-from repro.api import MIB, MeshSpec, PARALLEL_MODES, RunSpec, compile_run
-from repro.comm import CommConfig
+from repro.api import MIB, PARALLEL_MODES, MeshSpec, RunSpec, compile_run
+from repro.comm import COLLECTIVE_BACKENDS, CommConfig
 from repro.configs import ALL_ARCHS
 
 WIRE_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
@@ -30,12 +34,13 @@ WIRE_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
 def spec_from_args(args) -> RunSpec:
     comm = None
     if args.bucket_mb is not None or args.wire_dtype != "fp32" \
-            or args.overlap:
+            or args.overlap or args.comm_backend != "lax":
         bucket_mb = 4.0 if args.bucket_mb is None else args.bucket_mb
         comm = CommConfig(bucket_bytes=int(bucket_mb * MIB),
                           reduce_dtype=WIRE_DTYPES[args.wire_dtype],
                           hierarchical=args.pods > 1,
-                          overlap=args.overlap)
+                          overlap=args.overlap,
+                          backend=args.comm_backend)
     ckpt_every = 0
     if args.ckpt_dir:
         ckpt_every = args.ckpt_every if args.ckpt_every \
@@ -73,6 +78,12 @@ def main(argv=None):
                     help="issue each bucket's part-reduce inside the "
                          "backward pass (§3.1 bubble schedule) instead of "
                          "reducing after value_and_grad (zero1)")
+    ap.add_argument("--comm-backend", default="lax",
+                    choices=list(COLLECTIVE_BACKENDS),
+                    help="collective implementation for the zero1 "
+                         "schedules: lax (XLA collectives) or pallas-ring "
+                         "(the paper's explicit §3.4 ring; in-pod only "
+                         "under --pods>1, the cross-pod hop stays lax)")
     ap.add_argument("--optimizer", default=None,
                     choices=["adamw", "sgd"],
                     help="default: family choice (momentum SGD for the "
@@ -84,14 +95,17 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if (args.bucket_mb is not None or args.wire_dtype != "fp32"
-            or args.overlap) and args.parallel != "zero1":
-        ap.error("--bucket-mb / --wire-dtype / --overlap configure the "
-                 "explicit bucketed collectives; add --parallel zero1")
+            or args.overlap or args.comm_backend != "lax") \
+            and args.parallel != "zero1":
+        ap.error("--bucket-mb / --wire-dtype / --overlap / --comm-backend "
+                 "configure the explicit bucketed collectives; add "
+                 "--parallel zero1")
 
     run = compile_run(spec_from_args(args))
     print(f"arch: {run.cfg.name}  family={run.family.family}  "
           f"parallel={run.spec.parallel}  "
           f"overlap={run.spec.comm.overlap if run.spec.comm else False}  "
+          f"backend={run.spec.comm.backend if run.spec.comm else 'lax'}  "
           f"mesh={dict(run.mesh.shape) if run.mesh is not None else None}")
     hist = run.fit()   # auto-resumes from the latest --ckpt-dir checkpoint
     run.close()

@@ -17,8 +17,7 @@ from jax import lax
 from repro.configs.base import CNNConfig
 from repro.core.params import Spec, init_tree
 from repro.core.sharding import ShardingCtx
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops, ref as kref
 
 
 def _key(kind: str, i: int, part: str) -> str:

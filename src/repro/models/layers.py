@@ -15,9 +15,10 @@ import dataclasses
 import functools
 from typing import Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig

@@ -22,10 +22,15 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import (
-    ModelConfig, ATTN_GLOBAL, ATTN_LOCAL, BLOCK_MAMBA, BLOCK_SHARED_ATTN,
-    BLOCK_MLSTM, BLOCK_SLSTM,
+    ATTN_GLOBAL,
+    ATTN_LOCAL,
+    BLOCK_MAMBA,
+    BLOCK_MLSTM,
+    BLOCK_SHARED_ATTN,
+    BLOCK_SLSTM,
+    ModelConfig,
 )
-from repro.core.params import Spec, init_tree, axes_tree as _axes_tree
+from repro.core.params import Spec, axes_tree as _axes_tree, init_tree
 from repro.core.sharding import ShardingCtx
 from repro.models import layers, moe, ssm
 from repro.models.layers import attention_block, mlp_block, rms_norm

@@ -31,12 +31,9 @@ import numpy as np
 
 import jax
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
-from jax.sharding import NamedSharding
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.comm.bucketer import (
-    CommConfig, pack_bucket, plan_buckets, unpack_buckets,
-)
+from repro.comm.bucketer import CommConfig, pack_bucket, plan_buckets, unpack_buckets
 from repro.comm.schedule import group_axes, make_schedule
 from repro.core.collectives import flatten_pad, strip_broadcast, strip_reduce
 
@@ -121,7 +118,8 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
     data axes (grads are the LOCAL minibatch-shard gradients, summed over
     local samples); optimizer state lives as per-member strips sharded on
     dim 0 — per fusion bucket when ``comm`` is given, per tensor when
-    ``comm`` is None.
+    ``comm`` is None.  The bucketed collectives run on ``comm.backend``
+    (lax or the explicit Pallas ring — ``repro.comm.backends``).
 
     update_fn(params, grads, opt_state, lr) -> (new_params, new_opt_state)
     """
@@ -134,7 +132,7 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
 
     def _update(params, grads, opt_state, lr):
         plan = plan_buckets(params, G, comm.bucket_bytes)
-        sched = make_schedule(axis_arg, comm.hierarchical)
+        sched = make_schedule(axis_arg, comm.hierarchical, comm.backend)
         flat_grads = jax.tree.leaves(grads)
         # 1) one part-reduce per BUCKET: pack gradients into the fusion
         #    buffer, reduce on the wire dtype, mean in fp32
@@ -177,7 +175,7 @@ def make_overlapped_update(optimizer, mesh: Mesh, data_axes=("data",),
     comm = DEFAULT_COMM if comm is None else comm
     axes, axis_arg, G = group_axes(mesh, data_axes)
     init_fn = _make_bucketed_init(optimizer, mesh, axes, axis_arg, G, comm)
-    sched = make_schedule(axis_arg, comm.hierarchical)
+    sched = make_schedule(axis_arg, comm.hierarchical, comm.backend)
 
     def local_update(params, g_strips, opt_state, lr):
         plan = plan_buckets(params, G, comm.bucket_bytes)

@@ -8,8 +8,13 @@ from __future__ import annotations
 from typing import Dict
 
 from repro.configs.base import (
-    ModelConfig, ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN, BLOCK_MAMBA,
-    BLOCK_MLSTM, BLOCK_SLSTM,
+    ATTN_GLOBAL,
+    ATTN_LOCAL,
+    BLOCK_MAMBA,
+    BLOCK_MLSTM,
+    BLOCK_SHARED_ATTN,
+    BLOCK_SLSTM,
+    ModelConfig,
 )
 from repro.models import transformer
 from repro.models.ssm import mamba_dims, mlstm_dims

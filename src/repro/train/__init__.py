@@ -1,4 +1,6 @@
 from repro.train.train_step import (  # noqa: F401
-    make_overlapped_train_step, make_train_step, zero1_state_shardings,
+    make_overlapped_train_step,
+    make_train_step,
+    zero1_state_shardings,
 )
 from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -9,8 +9,7 @@ are reproducible.  No shrinking, no database; a failing example prints its
 drawn arguments in the assertion traceback instead.
 """
 try:
-    from hypothesis import given, settings  # noqa: F401
-    from hypothesis import strategies as st  # noqa: F401
+    from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:
     import functools

@@ -69,6 +69,7 @@ def test_smoke_and_stream_delegate_to_adapters():
     """configs.smoke_variant / data.stream_for route through the registry
     (the isinstance ladders are gone) and keep their old behavior."""
     import numpy as np
+
     from repro.configs import get_config, smoke_variant
     from repro.data import stream_for
     cnn_smoke = smoke_variant(get_config("vgg-a"))
@@ -89,6 +90,7 @@ def test_smoke_and_stream_delegate_to_adapters():
 # ---------------------------------------------------------------------------
 def test_trainer_counts_samples_for_vision_batches():
     import numpy as np
+
     from repro.train.trainer import _batch_items
     n, unit = _batch_items({"tokens": np.zeros((4, 16))})
     assert (n, unit) == (64, "tok")
@@ -109,6 +111,7 @@ def test_trainer_counts_samples_for_vision_batches():
 @pytest.mark.parametrize("parallel", ["serial", "dp", "zero1"])
 def test_compile_run_matrix(parallel):
     import jax
+
     from repro.api import RunSpec, compile_run
     from repro.configs import ALL_ARCHS
     for arch in ALL_ARCHS:
@@ -283,5 +286,46 @@ def test_api_zero1_hierarchical_and_gspmd_match_serial_lm():
                 np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                            rtol=1e-3, atol=1e-5,
                                            err_msg=spec.parallel)
+        print("OK")
+    """)
+
+
+def test_api_pallas_ring_matches_serial_vgg():
+    """CommConfig(backend="pallas-ring"): the compiled zero1 run through the
+    explicit Pallas ring collectives reproduces the serial run to float
+    tolerance — flat (8-way) and hierarchical (2 pods), with and without
+    the §3.1 backprop overlap.  The acceptance property for the backend
+    seam: swapping the wire implementation must not change training."""
+    run_py("""
+        import numpy as np, jax
+        from repro.api import RunSpec, MeshSpec, compile_run
+        from repro.comm import CommConfig
+        quiet = lambda *_: None
+        base = RunSpec(arch="vgg-a", smoke=True, steps=3, batch=8, lr=5e-3,
+                       schedule="constant", log_every=100, seed=0)
+        rs = compile_run(base)
+        hs = rs.fit(log_fn=quiet); rs.close()
+        ring = dict(bucket_bytes=1 << 16, backend="pallas-ring")
+        variants = [
+            base.replace(parallel="zero1", comm=CommConfig(**ring)),
+            base.replace(parallel="zero1",
+                         comm=CommConfig(overlap=True, **ring)),
+            base.replace(parallel="zero1", mesh=MeshSpec(pods=2),
+                         comm=CommConfig(hierarchical=True, **ring)),
+            base.replace(parallel="zero1", mesh=MeshSpec(pods=2),
+                         comm=CommConfig(hierarchical=True, overlap=True,
+                                         **ring)),
+        ]
+        for spec in variants:
+            rz = compile_run(spec)
+            hz = rz.fit(log_fn=quiet); rz.close()
+            tag = (f"hier={spec.comm.hierarchical}/"
+                   f"overlap={spec.comm.overlap}")
+            np.testing.assert_allclose(hz[-1]["loss"], hs[-1]["loss"],
+                                       rtol=1e-5, err_msg=tag)
+            for a, b in zip(jax.tree.leaves(rs.params),
+                            jax.tree.leaves(rz.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-4, atol=1e-6, err_msg=tag)
         print("OK")
     """)

@@ -8,15 +8,13 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import (
-    get_config, smoke_variant, ASSIGNED_ARCHS, PAPER_ARCHS,
-)
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_config, smoke_variant
 from repro.configs.base import CNNConfig
 from repro.core.sharding import ShardingCtx
 from repro.models import cnn, dnn, frontends, transformer
 from repro.optim import AdamW
-from repro.train import make_train_step
 from repro.optim.schedule import constant
+from repro.train import make_train_step
 
 CTX = ShardingCtx()
 KEY = jax.random.PRNGKey(0)

@@ -4,11 +4,9 @@ Each test pins an equation to either its closed form, a long-form
 re-derivation, or the paper's own reported numbers."""
 
 import pytest
-from _hypothesis_compat import given, settings, st
 
-from repro.configs import (
-    get_config, XEON_E5_2698V3_FDR as FDR, XEON_E5_2666V3_10GBE as GBE,
-)
+from _hypothesis_compat import given, settings, st
+from repro.configs import XEON_E5_2666V3_10GBE as GBE, XEON_E5_2698V3_FDR as FDR, get_config
 from repro.configs.base import ConvLayerSpec
 from repro.core import balance
 from repro.core.balance import LayerBalance

@@ -1,7 +1,7 @@
 """Paper §2.2 blocking solver tests."""
 import pytest
-from _hypothesis_compat import given, settings, st
 
+from _hypothesis_compat import given, settings, st
 from repro.core import blocking
 
 

@@ -1,9 +1,9 @@
 """Property tests for the strip helpers behind the §3.4 distributed update."""
 import numpy as np
-from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
+from _hypothesis_compat import given, settings, st
 from repro.core.collectives import flatten_pad, padded_size, unflatten
 
 

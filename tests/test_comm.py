@@ -10,15 +10,12 @@ import math
 
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
-from repro.comm.bucketer import (
-    CommConfig, pack_bucket, plan_buckets, unpack_buckets,
-)
-from repro.configs import XEON_E5_2698V3_FDR as FDR, \
-    XEON_E5_2666V3_10GBE as GBE
+from _hypothesis_compat import given, settings, st
+from repro.comm.bucketer import CommConfig, pack_bucket, plan_buckets, unpack_buckets
+from repro.configs import XEON_E5_2666V3_10GBE as GBE, XEON_E5_2698V3_FDR as FDR
 from repro.core import balance
 
 MIB = 2**20
@@ -138,7 +135,7 @@ def test_oversize_leaf_gets_its_own_bucket():
 def test_comm_config_validates_dtype():
     assert CommConfig(reduce_dtype="bfloat16").wire_dtype == jnp.bfloat16
     assert CommConfig().wire_dtype == jnp.float32
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         CommConfig(reduce_dtype="float16")
 
 
@@ -217,7 +214,9 @@ def test_paper_family_tree_order_is_forward_layer_order():
     in the bucket plan and defeat the §3.1 overlap schedule for the paper's
     own nets."""
     import re
+
     import jax
+
     from repro.api import adapter_for
     from repro.configs import get_config
     for net in ("vgg-a", "overfeat-fast", "cd-dnn"):
@@ -284,6 +283,7 @@ def test_overlap_grad_strips_match_serial_gradient():
     serial gradient (no reduction): the custom_vjp side channel is exact."""
     import jax
     from jax.sharding import AxisType, PartitionSpec as P
+
     from repro.comm.bucketer import pack_bucket as pack
     from repro.comm.overlap import make_overlap_grad
     mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
@@ -324,3 +324,71 @@ def test_hierarchical_beats_flat_ring_with_fast_pod_links():
                                                  16, 8, FDR,
                                                  pod_bw=4 * FDR.link_bw)
     assert t_hier < t_flat
+
+
+# ---------------------------------------------------------------------------
+# backend seam: make_schedule resolution + CommConfig validation
+# ---------------------------------------------------------------------------
+def test_make_schedule_rejects_three_axis_hierarchy():
+    """hierarchical=True with >2 axes has no defined composition order —
+    it must raise (naming the axes), not silently go flat (the seed bug)."""
+    from repro.comm.schedule import FlatSchedule, make_schedule
+    with pytest.raises(ValueError, match=r"\('a', 'b', 'c'\)"):
+        make_schedule(("a", "b", "c"), hierarchical=True)
+    # the documented one-axis fallback stays: a one-axis "hierarchy" IS the
+    # flat ring
+    assert isinstance(make_schedule("data", hierarchical=True), FlatSchedule)
+    assert isinstance(make_schedule(("data",), hierarchical=True),
+                      FlatSchedule)
+
+
+def test_make_schedule_binds_backends_per_level():
+    from repro.comm import LaxBackend, PallasRingBackend
+    from repro.comm.schedule import FlatSchedule, HierarchicalSchedule, make_schedule
+    flat = make_schedule("data", backend="pallas-ring")
+    assert isinstance(flat, FlatSchedule)
+    assert isinstance(flat.backend, PallasRingBackend)
+    # hierarchical: requested backend in-pod, lax on the cross-pod hop
+    hier = make_schedule(("pod", "data"), hierarchical=True,
+                         backend="pallas-ring")
+    assert isinstance(hier, HierarchicalSchedule)
+    assert isinstance(hier.inner_backend, PallasRingBackend)
+    assert isinstance(hier.outer_backend, LaxBackend)
+    # explicit cross_backend override + instance pass-through
+    mine = PallasRingBackend(interpret=True)
+    hier2 = make_schedule(("pod", "data"), hierarchical=True,
+                          backend=mine, cross_backend="pallas-ring")
+    assert hier2.inner_backend is mine
+    assert isinstance(hier2.outer_backend, PallasRingBackend)
+
+
+def test_get_backend_and_commconfig_validate_names():
+    from repro.comm import COLLECTIVE_BACKENDS, get_backend
+    assert set(COLLECTIVE_BACKENDS) == {"lax", "pallas-ring"}
+    with pytest.raises(ValueError, match="nccl"):
+        get_backend("nccl")
+    # a real exception (never assert: -O must not disable config validation)
+    with pytest.raises(ValueError, match="nccl"):
+        CommConfig(backend="nccl")
+    with pytest.raises(ValueError, match="float16"):
+        CommConfig(reduce_dtype="float16")
+    assert CommConfig().backend == "lax"
+    assert CommConfig(backend="pallas-ring").backend == "pallas-ring"
+
+
+def test_backend_models_cover_all_backends():
+    """Every registered backend has §3.2 cost-model constants, and the ring
+    time responds to them (lax is the calibration identity)."""
+    from repro.comm import COLLECTIVE_BACKENDS
+    from repro.core.balance import RING_BACKEND_MODELS, backend_hw
+    assert set(RING_BACKEND_MODELS) == set(COLLECTIVE_BACKENDS)
+    assert backend_hw(FDR, "lax") is FDR
+    ring = backend_hw(FDR, "pallas-ring")
+    assert ring.sw_latency < FDR.sw_latency
+    assert ring.link_bw <= FDR.link_bw
+    t_lax = balance.ring_collective_time(MIB, 8, FDR, backend="lax")
+    t_ring = balance.ring_collective_time(MIB, 8, FDR, backend="pallas-ring")
+    assert t_lax == balance.ring_collective_time(MIB, 8, FDR)
+    assert t_ring != t_lax
+    with pytest.raises(ValueError, match="nccl"):
+        backend_hw(FDR, "nccl")

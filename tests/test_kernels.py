@@ -1,11 +1,11 @@
 """Per-kernel allclose sweeps against the ref.py oracles (interpret mode)."""
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
 
+from _hypothesis_compat import given, settings, st
 from repro.kernels import ops, ref
 from repro.kernels.blocked_matmul import blocked_matmul
 from repro.kernels.conv2d import conv2d_nhwc
@@ -142,3 +142,69 @@ def test_decode_attention_ref_ring_buffer_invariance():
         return jnp.roll(t, 7, axis=1)
     out2 = ref.decode_attention_ref(q, rot(k), rot(v), ln)
     np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# §3.4 ring reduce-scatter / all-gather (kernels/ring.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+@given(G=st.sampled_from([1, 2, 3, 4, 8]), n=st.sampled_from([1, 3, 8, 40]))
+@settings(max_examples=12, deadline=None)
+def test_ring_reduce_scatter_matches_oracle(dtype, tol, G, n):
+    from repro.kernels.ring import ring_reduce_scatter
+    stacked = _arr(G, G * n, dtype=dtype)
+    got = ring_reduce_scatter(stacked, interpret=True)
+    want = ref.ring_reduce_scatter_ref(stacked)
+    assert got.shape == (G, n) and got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@given(G=st.sampled_from([1, 2, 3, 4, 8]), n=st.sampled_from([1, 3, 8, 40]))
+@settings(max_examples=12, deadline=None)
+def test_ring_all_gather_matches_oracle(dtype, G, n):
+    from repro.kernels.ring import ring_all_gather
+    strips = _arr(G, n, dtype=dtype)
+    got = ring_all_gather(strips, interpret=True)
+    want = ref.ring_all_gather_ref(strips)
+    assert got.shape == (G, G * n)
+    # pure data movement: must be EXACT in any dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(G=st.sampled_from([2, 4, 8]), n=st.sampled_from([2, 16]))
+@settings(max_examples=8, deadline=None)
+def test_ring_round_trip_is_allreduce(G, n):
+    """all_gather(reduce_scatter(x)) == the replicated full sum on every
+    member — the §3.4 part-reduce/part-broadcast identity the ZeRO-1 strip
+    update relies on."""
+    from repro.kernels.ring import ring_all_gather, ring_reduce_scatter
+    stacked = _arr(G, G * n)
+    full = ring_all_gather(ring_reduce_scatter(stacked, interpret=True),
+                           interpret=True)
+    want = np.broadcast_to(np.asarray(stacked).sum(axis=0), (G, G * n))
+    np.testing.assert_allclose(np.asarray(full), want, rtol=1e-5, atol=1e-5)
+
+
+def test_ring_reduce_scatter_rejects_ragged_buffer():
+    from repro.kernels.ring import ring_reduce_scatter
+    with pytest.raises(ValueError):
+        ring_reduce_scatter(_arr(3, 10), interpret=True)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ring_hop_accum_matches_jnp(dtype):
+    """The distributed backend's per-hop combine: recv + chunks[c] for every
+    valid (traced) chunk index."""
+    from repro.kernels.ring import ring_hop_accum
+    G, n = 4, 24
+    chunks = _arr(G, n, dtype=dtype)
+    recv = _arr(n, dtype=dtype)
+    for c in range(G):
+        got = ring_hop_accum(chunks, recv, jnp.int32(c), interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(recv + chunks[c], np.float32), rtol=1e-6, atol=1e-6)

@@ -1,10 +1,10 @@
 """Layer-level tests: RoPE/M-RoPE, chunked attention, norms, MLP."""
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
+from _hypothesis_compat import given, settings, st
 from repro.kernels import ref
 from repro.models import layers
 

@@ -107,8 +107,9 @@ def test_moe_gradients_flow_to_router_and_experts():
 
 def test_chunked_loss_equals_plain():
     import jax
-    from repro.models import transformer
+
     from repro.configs import get_config, smoke_variant
+    from repro.models import transformer
     cfg = smoke_variant(get_config("qwen2-moe-a2.7b"))
     p = jax.tree.map(lambda a: a, transformer.init_params(
         cfg, jax.random.PRNGKey(0)))
@@ -124,9 +125,10 @@ def test_chunked_loss_equals_plain():
 def test_expert_pad_preserves_semantics():
     """Padded (dummy) experts never receive tokens -> identical output."""
     import jax.numpy as jnp
-    from repro.models import transformer
+
     from repro.configs import get_config, smoke_variant
     from repro.core.sharding import ShardingCtx
+    from repro.models import transformer
     cfg = smoke_variant(get_config("qwen2-moe-a2.7b"))
     p = transformer.init_params(cfg, jax.random.PRNGKey(0))
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,

@@ -1,11 +1,11 @@
 """Sharding rules resolver + hybrid planner tests (no multi-device needed —
 the resolver is pure metadata against an abstract mesh)."""
 import pytest
-from _hypothesis_compat import given, settings, st
 
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, INPUT_SHAPES, TPU_V5E, ASSIGNED_ARCHS
+from _hypothesis_compat import given, settings, st
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, TPU_V5E, get_config
 from repro.core import hybrid
 from repro.core.sharding import ShardingRules
 
