@@ -1,0 +1,154 @@
+"""Serving load benchmark: static vs continuous batching at EQUAL cache
+budget (deliverable for ROADMAP item 1 / BENCH_serve.json baseline).
+
+An open-loop Poisson arrival process drives a heavy-tail request mix
+(mostly short decodes, a fat tail of long ones — the regime where a static
+wave idles its short requests' slots behind the longest member) against two
+servers that differ ONLY in ``ServeSpec.scheduler``.  Reported per policy:
+request p50/p99 latency (submit -> finish, queueing included) and decode
+throughput.  Continuous batching must WIN throughput — that is the claim
+this benchmark pins, and the JSON it writes is the repo's first persisted
+perf baseline.
+
+    PYTHONPATH=src python benchmarks/serve_load.py            # CI-sized
+    PYTHONPATH=src python benchmarks/serve_load.py --requests 64 --rate 20
+
+Writes ``BENCH_serve.json`` (``--out``) with the full metric set, machine
+readable, and prints the aggregator's ``name,value,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.api import ServeSpec, compile_serve
+
+
+def heavy_tail_workload(rng, n, max_prompt, max_new, rate):
+    """(arrival_s, prompt, max_new) triples: Poisson arrivals (exponential
+    gaps at ``rate`` req/s), ~1/5 of requests take the full decode budget,
+    the rest a short one — the length mix that separates the schedulers."""
+    reqs, t = [], 0.0
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        L = int(rng.integers(2, max_prompt + 1))
+        new = max_new if rng.random() < 0.2 else max(max_new // 8, 1)
+        prompt = rng.integers(1, 512, size=L).astype(np.int32)
+        reqs.append((t, prompt, new))
+    return reqs
+
+
+def run_policy(policy, spec_kw, workload, warm_lengths):
+    spec = ServeSpec(scheduler=policy, **spec_kw)
+    server = compile_serve(spec)
+
+    # warm every executable (decode + each prefill bucket) OUTSIDE the
+    # timed window — this measures scheduling, not XLA compile time
+    for L in warm_lengths:
+        server.submit(np.ones(L, np.int32), 1)
+    server.drain()
+    warm_stats = dict(server.stats)
+
+    done = []
+    pending = list(workload)
+    t0 = time.perf_counter()
+    while pending or server.pending or server.active:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            _, prompt, new = pending.pop(0)
+            server.submit(prompt, new)
+        if server.pending or server.active:
+            done.extend(server.step())
+        elif pending:
+            time.sleep(min(pending[0][0] - now, 0.01))
+    elapsed = time.perf_counter() - t0
+
+    lat = np.sort([r.latency for r in done])
+    n_tok = int(sum(len(r.tokens) for r in done))
+    steps = server.stats["steps"] - warm_stats["steps"]
+    decoded = server.stats["decode_tokens"] - warm_stats["decode_tokens"]
+    return {
+        "scheduler": policy,
+        "requests": len(done),
+        "elapsed_s": round(elapsed, 4),
+        "output_tokens": n_tok,
+        "tokens_per_s": round(n_tok / elapsed, 2),
+        "latency_p50_s": round(float(lat[len(lat) // 2]), 4),
+        "latency_p99_s": round(float(lat[min(len(lat) - 1,
+                                             int(len(lat) * 0.99))]), 4),
+        "scheduler_steps": steps,
+        "decode_slot_tokens": decoded,
+        "slot_utilization": round(decoded / max(steps * spec.max_batch, 1),
+                                  4),
+        "preemptions": server.stats["preemptions"] - warm_stats["preemptions"],
+    }
+
+
+def run(args):
+    spec_kw = dict(arch=args.arch, smoke=True, max_batch=args.max_batch,
+                   page_size=args.page_size, num_pages=args.num_pages,
+                   max_prompt=args.max_prompt, max_new_tokens=args.max_new,
+                   prefill_bucket=args.max_prompt)  # one bucket: fair warmup
+    rng = np.random.default_rng(args.seed)
+    workload = heavy_tail_workload(rng, args.requests, args.max_prompt,
+                                   args.max_new, args.rate)
+    warm = [2, args.max_prompt]
+    results = {p: run_policy(p, spec_kw, workload, warm)
+               for p in ("static", "continuous")}
+    return {
+        "benchmark": "serve_load",
+        "arch": args.arch,
+        "spec": {k: v for k, v in spec_kw.items()},
+        "workload": {"requests": args.requests, "rate_per_s": args.rate,
+                     "seed": args.seed, "mix": "heavy-tail (20% full-budget "
+                     "decodes, rest short)"},
+        "policies": results,
+        "continuous_speedup": round(
+            results["continuous"]["tokens_per_s"]
+            / results["static"]["tokens_per_s"], 3),
+    }
+
+
+def rows(report):
+    """Aggregator rows (benchmarks/run.py CSV convention)."""
+    out = []
+    for p, r in report["policies"].items():
+        out.append((f"serve/{p}/tokens_per_s", r["tokens_per_s"], ""))
+        out.append((f"serve/{p}/latency_p50_s", r["latency_p50_s"], ""))
+        out.append((f"serve/{p}/latency_p99_s", r["latency_p99_s"], ""))
+        out.append((f"serve/{p}/slot_utilization", r["slot_utilization"], ""))
+    out.append(("serve/continuous_speedup", report["continuous_speedup"],
+                "continuous/static tokens_per_s, >1 expected"))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent
+                                         / "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    report = run(args)
+    for name, value, derived in rows(report):
+        print(f"{name},{value},{derived}", flush=True)
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

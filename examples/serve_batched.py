@@ -1,62 +1,57 @@
-"""Batched serving example: prefill a batch of prompts, then decode
-incrementally with ring-buffered KV caches (the decode_32k/long_500k path).
+"""Continuous-batching serving example, through the ServeSpec seam.
+
+A mixed-length prompt batch is submitted to a :class:`repro.api.Server`;
+the scheduler packs requests into paged-KV decode slots in flight, so a
+short request finishing frees its slot (and pages) for the next queued
+prompt immediately — no waiting for the longest request in a wave.
 
     PYTHONPATH=src python examples/serve_batched.py --arch gemma2-2b
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config, smoke_variant
-from repro.core.sharding import ShardingCtx
-from repro.models import transformer
-from repro.serve import decode_step, prefill
+from repro.api import ServeSpec, compile_serve
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=48)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "static"])
     args = ap.parse_args(argv)
 
-    cfg = smoke_variant(get_config(args.arch))
-    ctx = ShardingCtx()
-    key = jax.random.PRNGKey(0)
-    params = transformer.init_params(cfg, key)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
+    spec = ServeSpec(arch=args.arch, smoke=True, max_batch=args.max_batch,
+                     page_size=16, num_pages=128,
+                     max_prompt=args.prompt_len,
+                     max_new_tokens=args.new_tokens,
+                     scheduler=args.scheduler)
+    server = compile_serve(spec)
+
+    # heavy-tail-ish mix: mostly short prompts/outputs, a few long ones
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        L = int(rng.integers(4, args.prompt_len + 1))
+        new = args.new_tokens if i % 4 == 0 else max(args.new_tokens // 6, 1)
+        server.submit(rng.integers(1, server.cfg.vocab_size, size=L), new)
 
     t0 = time.perf_counter()
-    logits, caches = jax.jit(
-        lambda p, t: prefill(p, cfg, ctx, t,
-                             capacity=args.prompt_len + args.new_tokens)
-    )(params, prompts)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: {args.batch} x {args.prompt_len} tokens in "
-          f"{t_prefill * 1e3:.1f} ms "
-          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
-
-    step = jax.jit(lambda p, t, pos, c: decode_step(p, cfg, ctx, t, pos, c))
-    cur = jnp.argmax(logits, -1)[:, None]
-    out = [cur]
-    t0 = time.perf_counter()
-    for i in range(1, args.new_tokens):
-        logits, caches = step(params, cur,
-                              jnp.asarray(args.prompt_len + i - 1), caches)
-        cur = jnp.argmax(logits, -1)[:, None]
-        out.append(cur)
-    jax.block_until_ready(cur)
-    t_dec = time.perf_counter() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"decode: {args.batch} x {args.new_tokens - 1} steps in "
-          f"{t_dec:.2f} s "
-          f"({args.batch * (args.new_tokens - 1) / t_dec:.0f} tok/s)")
-    print("sample:", toks[0, :16].tolist())
+    done = server.drain()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.tokens) for r in done)
+    lat = sorted(r.latency for r in done)
+    print(f"{spec.scheduler}: {len(done)} requests, {n_tok} tokens in "
+          f"{dt:.2f}s ({n_tok / dt:.0f} tok/s incl. compile)")
+    print(f"latency p50={lat[len(lat) // 2] * 1e3:.0f} ms "
+          f"max={lat[-1] * 1e3:.0f} ms  "
+          f"scheduler steps={server.stats['steps']}  "
+          f"preemptions={server.stats['preemptions']}")
+    print("sample:", done[0].output[:16].tolist())
 
 
 if __name__ == "__main__":

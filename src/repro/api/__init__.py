@@ -14,15 +14,29 @@ the update path (serial / dp / explicit-bucketed zero1 / GSPMD zero1) and
 returns a ready :class:`Run`.  New model families plug in with
 ``register_family``; the stable low-level layer (``make_train_step``,
 ``make_distributed_update``) is unchanged underneath.
+
+Serving mirrors the same seam:
+
+    from repro.api import ServeSpec, compile_serve
+    server = compile_serve(ServeSpec(arch="llama3-8b", smoke=True))
+    rid = server.submit([1, 2, 3]); out = server.drain()
+
+``ServeSpec`` declares the deployment (arch, batch/page/capacity budgets,
+scheduler policy, sampling); ``compile_serve`` validates the arch, builds
+the paged KV pools and returns a live continuous-batching :class:`Server`.
 """
-from repro.api.assemble import compile_run  # noqa: F401
+from repro.api.assemble import compile_run, compile_serve  # noqa: F401
 from repro.api.families import FamilyAdapter, adapter_for, families, register_family  # noqa: F401
 from repro.api.run import Run  # noqa: F401
+from repro.api.serve import Request, Server  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     MIB,
     OPTIMIZERS,
+    PAGED_ATTN_IMPLS,
     PARALLEL_MODES,
+    SCHEDULER_POLICIES,
     SCHEDULES,
     MeshSpec,
     RunSpec,
+    ServeSpec,
 )

@@ -1,4 +1,5 @@
-"""``compile_run``: RunSpec -> Run.  The one place run assembly happens.
+"""``compile_run``: RunSpec -> Run, ``compile_serve``: ServeSpec -> Server.
+The one place run/deployment assembly happens.
 
 Resolution order:
 
@@ -31,7 +32,8 @@ from jax.sharding import Mesh
 
 from repro.api.families import FamilyAdapter, adapter_for
 from repro.api.run import Run
-from repro.api.spec import RunSpec
+from repro.api.serve import Server
+from repro.api.spec import RunSpec, ServeSpec
 from repro.comm.bucketer import CommConfig
 from repro.configs import get_config, smoke_variant
 from repro.core.params import Spec
@@ -146,3 +148,41 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
                ctx=ctx, loss_fn=loss_fn, optimizer=optimizer,
                lr_schedule=lr_schedule, train_step=train_step,
                params=params, opt_state=opt_state)
+
+
+def compile_serve(spec: ServeSpec, params=None,
+                  rules: Optional[ShardingRules] = None) -> Server:
+    """Assemble a live :class:`~repro.api.serve.Server` from a declarative
+    ``spec`` (the serving twin of ``compile_run``).
+
+    ``params`` lets a caller serve trained weights (e.g. ``run.params``
+    after training); ``None`` initializes fresh ones from ``spec.seed``.
+    Paged decode covers the attention block kinds only, so non-transformer
+    families, modality frontends, M-RoPE, and codebook heads are rejected
+    here — before any buffer is allocated.
+    """
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer
+    from repro.models.transformer import ATTN_KINDS
+
+    cfg = get_config(spec.arch) if isinstance(spec.arch, str) else spec.arch
+    cfg = smoke_variant(cfg) if spec.smoke else cfg
+    if not isinstance(cfg, ModelConfig):
+        raise ValueError(
+            f"compile_serve needs a token LM ModelConfig, got "
+            f"{type(cfg).__name__} — serving covers the transformer family "
+            "only")
+    bad = [k for k in cfg.block_pattern if k not in ATTN_KINDS]
+    if bad:
+        raise ValueError(
+            f"paged decode serves attention blocks only ({ATTN_KINDS}); "
+            f"{cfg.name!r} has {bad} in its pattern")
+    if cfg.frontend is not None or cfg.num_codebooks or cfg.mrope:
+        raise ValueError(
+            f"{cfg.name!r} uses a modality frontend / codebook heads / "
+            "M-RoPE — token-in/token-out archs only for serving")
+
+    ctx = ShardingCtx(None, rules if rules is not None else ShardingRules())
+    if params is None:
+        params = transformer.init_params(cfg, jax.random.PRNGKey(spec.seed))
+    return Server(spec=spec, cfg=cfg, ctx=ctx, params=params)

@@ -1,0 +1,358 @@
+"""The executable product of ``compile_serve``: a continuous-batching server.
+
+A :class:`Server` owns everything request serving needs, already assembled:
+ONE compiled decode executable over ``max_batch`` slots of paged KV pools
+(following ``Run.jit_step`` — the seed ``generate()`` re-jitted prefill and
+decode per call), one compiled prefill per padded prompt bucket, the
+host-side :class:`~repro.serve.kvcache.PagedKVCache` free-list the scheduler
+admits and preempts against, and the request queue.
+
+The engine loop is ``submit() -> step() -> ... -> drain()``:
+
+``submit``
+    Admission control: bounded queue (``ServeSpec.max_queue``), prompt and
+    decode budgets validated against the spec.
+``step``
+    One scheduler iteration.  Under the ``continuous`` policy every free
+    slot is refilled from the queue whenever the page pool can hold the
+    newcomer (in-flight batching); under ``static`` a wave is admitted only
+    once the whole previous wave finished.  Newly admitted requests are
+    prefilled (dense causal prefill, packed into their pages) and every
+    active slot then advances one token through the single jitted paged
+    decode step.  If a slot's next token needs a page the pool can't
+    provide, the YOUNGEST active request is preempted — its pages return to
+    the free list and it restarts from the queue front
+    (restart-on-preempt; deterministic sampling regenerates its tokens).
+``drain``
+    Step until queue and slots are empty; returns the completed requests.
+
+Idle slots point their page-table row at the reserved null page and their
+(discarded) decode writes land there — the decode executable's shape never
+changes, so continuous batching costs zero recompiles.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import ShardingCtx
+from repro.models import layers, transformer
+from repro.serve.kvcache import PagedKVCache
+
+
+def _sample(logits: jax.Array, temperature: float, key: jax.Array):
+    """Greedy (temperature <= 0) or categorical over (..., V) logits."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+@dataclass
+class Request:
+    """One generation request and its lifecycle bookkeeping (wall-clock
+    times from ``time.perf_counter``; ``None`` until reached)."""
+    rid: int
+    prompt: np.ndarray                   # (L,) int32
+    max_new: int
+    submit_t: float
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    tokens: List[int] = field(default_factory=list)
+    preemptions: int = 0
+    admit_seq: int = -1                  # admission order (preempt youngest)
+
+    @property
+    def output(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+    @property
+    def done(self) -> bool:
+        return self.finish_t is not None
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.finish_t is None else self.finish_t - self.submit_t
+
+
+class Server:
+    """An assembled serving deployment (see module docstring).  Built by
+    ``repro.api.assemble.compile_serve``; not meant to be constructed by
+    hand."""
+
+    def __init__(self, spec: Any, cfg: Any, ctx: ShardingCtx, params: Any):
+        self.spec = spec
+        self.cfg = cfg
+        self.ctx = ctx
+        self.params = params
+
+        B = spec.max_batch
+        n = spec.pages_per_request
+        self.alloc = PagedKVCache(spec.num_pages, spec.page_size)
+        self._pools = [
+            (c.pages_k, c.pages_v) for c in transformer.init_paged_caches(
+                cfg, B, spec.num_pages, spec.page_size, n,
+                impl=spec.attn_impl)]
+        self._pt = np.zeros((B, n), np.int32)
+        self._lengths = np.zeros((B,), np.int32)
+        self._last_tok = np.zeros((B,), np.int32)
+        self._slots: List[Optional[Request]] = [None] * B
+        self._queue: deque = deque()
+        self._key = jax.random.PRNGKey(spec.seed)
+        self._next_rid = 0
+        self._admit_seq = 0
+        self._decode_jit = None
+        self._prefill_jits: Dict[int, Any] = {}
+        self.stats = {"steps": 0, "decode_tokens": 0, "prefill_tokens": 0,
+                      "preemptions": 0, "completed": 0}
+
+    # ------------------------------------------------------------------
+    # compiled executables
+    # ------------------------------------------------------------------
+    def _split(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    @property
+    def decode_jit(self):
+        """THE jitted decode step: (params, toks, lengths, page_table,
+        pools, key) -> (next_tokens, pools).  One executable for the
+        server's lifetime; pools are donated (replaced every step)."""
+        if self._decode_jit is None:
+            cfg, ctx = self.cfg, self.ctx
+            impl, temp = self.spec.attn_impl, self.spec.temperature
+            R = cfg.pattern_repeats
+
+            def fn(params, toks, lengths, pt, pools, key):
+                pt_s = jnp.broadcast_to(pt[None], (R,) + pt.shape)
+                len_s = jnp.broadcast_to(lengths[None], (R,) + lengths.shape)
+                caches = tuple(
+                    layers.PagedKVState(k, v, pt_s, len_s, impl)
+                    for (k, v) in pools)
+                logits, _, new_caches = transformer.forward(
+                    params, cfg, ctx, tokens=toks,
+                    positions=lengths[:, None], caches=caches)
+                tok = _sample(logits[:, -1], temp, key)
+                return tok, [(c.pages_k, c.pages_v) for c in new_caches]
+
+            self._decode_jit = jax.jit(fn, donate_argnums=(4,))
+        return self._decode_jit
+
+    def _bucket(self, length: int) -> int:
+        b = self.spec.prefill_bucket
+        while b < length:
+            b *= 2
+        return b
+
+    def _prefill_jit(self, bucket: int):
+        """Compiled prefill for one padded prompt bucket: dense causal
+        prefill, pack the KV into the request's pages, sample the first
+        token.  Cached per bucket — repeated prompts of similar length
+        reuse the executable."""
+        if bucket not in self._prefill_jits:
+            cfg, ctx = self.cfg, self.ctx
+            ps, temp = self.spec.page_size, self.spec.temperature
+            n = self.spec.pages_per_request
+
+            def fn(params, toks, length, page_row, pools, key):
+                caches = transformer.init_caches(cfg, 1, bucket)
+                logits, _, dense = transformer.forward(
+                    params, cfg, ctx, tokens=toks, caches=caches,
+                    update_cache=True)
+                last = jax.lax.dynamic_index_in_dim(
+                    logits, length - 1, axis=1, keepdims=False)   # (1, V)
+                tok = _sample(last, temp, key)[0]
+                pos = jnp.arange(bucket)
+                lp = pos // ps
+                # positions past the page-table span go to the null page;
+                # garbage past `length` inside allocated pages is either
+                # overwritten by decode or masked (pos < length)
+                phys = jnp.where(lp < n, page_row[jnp.minimum(lp, n - 1)], 0)
+                off = pos % ps
+                new_pools = []
+                for (kp, vp), dc in zip(pools, dense):
+                    C_e = dc.k.shape[2]      # dense ring capacity this entry
+                    src_k = dc.k[:, 0, pos % C_e]         # (R, bucket, H, D)
+                    src_v = dc.v[:, 0, pos % C_e]
+                    new_pools.append((
+                        kp.at[:, phys, off].set(src_k.astype(kp.dtype)),
+                        vp.at[:, phys, off].set(src_v.astype(vp.dtype))))
+                return tok, new_pools
+
+            self._prefill_jits[bucket] = jax.jit(fn, donate_argnums=(4,))
+        return self._prefill_jits[bucket]
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> int:
+        """Queue one prompt; returns the request id.  Raises RuntimeError
+        when admission control rejects (queue at ``max_queue``) and
+        ValueError for prompts/budgets beyond the spec."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not 1 <= prompt.shape[0] <= self.spec.max_prompt:
+            raise ValueError(
+                f"prompt length {prompt.shape[0]} outside "
+                f"[1, max_prompt={self.spec.max_prompt}]")
+        max_new = (self.spec.max_new_tokens if max_new_tokens is None
+                   else max_new_tokens)
+        if not 1 <= max_new <= self.spec.max_new_tokens:
+            raise ValueError(
+                f"max_new_tokens {max_new} outside "
+                f"[1, max_new_tokens={self.spec.max_new_tokens}]")
+        if len(self._queue) >= self.spec.max_queue:
+            raise RuntimeError(
+                f"admission rejected: queue at max_queue="
+                f"{self.spec.max_queue}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, prompt=prompt, max_new=max_new,
+                                   submit_t=time.perf_counter()))
+        return rid
+
+    @property
+    def active(self) -> List[Request]:
+        return [r for r in self._slots if r is not None]
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def step(self) -> List[Request]:
+        """One scheduler iteration: admit + prefill newcomers, advance every
+        active slot one decode token.  Returns requests completed during
+        this step."""
+        completed: List[Request] = []
+        self._admit(completed)
+        active = [(b, r) for b, r in enumerate(self._slots) if r is not None]
+        if not active:
+            return completed
+        self._ensure_pages()
+        active = [(b, r) for b, r in enumerate(self._slots) if r is not None]
+        tok, self._pools = self.decode_jit(
+            self.params, jnp.asarray(self._last_tok[:, None]),
+            jnp.asarray(self._lengths), jnp.asarray(self._pt),
+            self._pools, self._split())
+        tok = np.asarray(tok)
+        self.stats["steps"] += 1
+        self.stats["decode_tokens"] += len(active)
+        for b, req in active:
+            req.tokens.append(int(tok[b]))
+            self._lengths[b] += 1
+            self._last_tok[b] = tok[b]
+            if len(req.tokens) >= req.max_new:
+                self._finish(b, req, completed)
+        return completed
+
+    def drain(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Step until the queue and all slots are empty; returns every
+        request completed during the drain."""
+        limit = max_steps if max_steps is not None else (
+            10_000 + self.spec.max_new_tokens * (
+                len(self._queue) + self.spec.max_batch) * 4)
+        done: List[Request] = []
+        for _ in range(limit):
+            if not self._queue and not self.active:
+                return done
+            done.extend(self.step())
+        raise RuntimeError(f"drain did not converge in {limit} steps "
+                           f"({len(self._queue)} queued, "
+                           f"{len(self.active)} active)")
+
+    # ------------------------------------------------------------------
+    # scheduler internals
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for b, r in enumerate(self._slots):
+            if r is None:
+                return b
+        return None
+
+    def _admit(self, completed: List[Request]):
+        if self.spec.scheduler == "static" and self.active:
+            return                       # wave still running: no admission
+        while self._queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self._queue[0]
+            L = len(req.prompt)
+            if self.alloc.alloc(req.rid, self.alloc.pages_for(L + 1)) is None:
+                return                   # pool can't hold it yet: wait
+            self._queue.popleft()
+            self._prefill_into(slot, req)
+            if len(req.tokens) >= req.max_new:
+                self._finish(slot, req, completed)
+
+    def _prefill_into(self, slot: int, req: Request):
+        L = len(req.prompt)
+        bucket = self._bucket(L)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :L] = req.prompt
+        row = self.alloc.page_row(req.rid, self.spec.pages_per_request)
+        tok, self._pools = self._prefill_jit(bucket)(
+            self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32),
+            jnp.asarray(row), self._pools, self._split())
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        req.tokens = [int(tok)]
+        req.first_token_t = time.perf_counter()
+        self._slots[slot] = req
+        self._pt[slot] = row
+        self._lengths[slot] = L
+        self._last_tok[slot] = req.tokens[0]
+        self.stats["prefill_tokens"] += L
+
+    def _ensure_pages(self):
+        """Every active slot gets the page its next decode write needs;
+        preempt the youngest active request when the pool runs dry."""
+        for b in sorted((b for b, r in enumerate(self._slots)
+                         if r is not None),
+                        key=lambda b: self._slots[b].admit_seq):
+            req = self._slots[b]
+            if req is None:              # preempted by an earlier iteration
+                continue
+            need = self.alloc.pages_for(int(self._lengths[b]) + 1)
+            while not self.alloc.ensure(req.rid, need):
+                victims = [(r.admit_seq, s) for s, r in
+                           enumerate(self._slots)
+                           if r is not None and s != b]
+                if not victims:
+                    raise RuntimeError(
+                        "page pool exhausted by a single request — "
+                        "ServeSpec validation should have prevented this")
+                self._preempt(max(victims)[1])
+            self._pt[b] = self.alloc.page_row(
+                req.rid, self.spec.pages_per_request)
+
+    def _preempt(self, slot: int):
+        req = self._slots[slot]
+        self.alloc.free(req.rid)
+        req.tokens = []
+        req.first_token_t = None
+        req.preemptions += 1
+        req.admit_seq = -1
+        self._clear_slot(slot)
+        self._queue.appendleft(req)
+        self.stats["preemptions"] += 1
+
+    def _finish(self, slot: int, req: Request, completed: List[Request]):
+        req.finish_t = time.perf_counter()
+        self.alloc.free(req.rid)
+        self._clear_slot(slot)
+        self.stats["completed"] += 1
+        completed.append(req)
+
+    def _clear_slot(self, slot: int):
+        self._slots[slot] = None
+        self._pt[slot] = 0
+        self._lengths[slot] = 0
+        self._last_tok[slot] = 0

@@ -40,6 +40,9 @@ PARALLEL_MODES = ("serial", "dp", "zero1", "zero1-gspmd")
 OPTIMIZERS = ("adamw", "sgd")
 SCHEDULES = ("warmup_cosine", "constant")
 
+SCHEDULER_POLICIES = ("static", "continuous")
+PAGED_ATTN_IMPLS = ("gather", "pallas")
+
 MIB = 2 ** 20
 
 
@@ -121,4 +124,84 @@ class RunSpec:
                 f"(got parallel={self.parallel!r})")
 
     def replace(self, **kw) -> "RunSpec":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ServeSpec:
+    """Declarative description of one serving deployment: WHAT to serve and
+    under WHICH budgets, mirroring ``RunSpec`` — ``compile_serve``
+    (``repro.api.assemble``) turns it into a live
+    :class:`~repro.api.serve.Server` with ``.submit()/.step()/.drain()``.
+
+    arch:            registry id (``configs.ALL_ARCHS``) or a concrete
+                     ``ModelConfig``.  Must be a token-in/token-out
+                     attention-block transformer (no frontends/SSM blocks —
+                     paged decode covers global/local/shared attention).
+    smoke:           reduce to the family's CPU-sized smoke variant.
+    max_batch:       concurrent decode slots (the continuous-batching width).
+    page_size:       tokens per KV page.
+    num_pages:       physical pages in each layer's pool (page 0 is the
+                     reserved null page) — THE cache budget; the scheduler
+                     admits/preempts against its free list.
+    max_prompt:      longest admissible prompt.
+    max_new_tokens:  per-request decode budget (requests may ask for less).
+    max_queue:       admission control — ``submit`` beyond this backlog
+                     raises instead of queueing unboundedly.
+    scheduler:       ``"continuous"`` (refill free slots every step — in-
+                     flight batching) or ``"static"`` (admit a wave, decode
+                     until ALL of it finishes, then admit the next — the
+                     baseline the load benchmark compares against).
+    attn_impl:       paged decode attention math: ``"gather"`` (jnp page
+                     gather, runs anywhere) or ``"pallas"`` (the
+                     scalar-prefetch page-gather kernel; interpret off-TPU).
+    temperature:     0 = greedy, else categorical sampling.
+    prefill_bucket:  prompts are right-padded to the next power-of-two
+                     bucket >= this, so prefill compiles once per bucket
+                     instead of once per prompt length.
+    """
+    arch: Union[str, Any]
+    smoke: bool = False
+    max_batch: int = 4
+    page_size: int = 16
+    num_pages: int = 128
+    max_prompt: int = 64
+    max_new_tokens: int = 32
+    max_queue: int = 1024
+    scheduler: str = "continuous"
+    attn_impl: str = "gather"
+    temperature: float = 0.0
+    seed: int = 0
+    prefill_bucket: int = 16
+
+    def __post_init__(self):
+        if self.scheduler not in SCHEDULER_POLICIES:
+            raise ValueError(f"scheduler must be one of {SCHEDULER_POLICIES},"
+                             f" got {self.scheduler!r}")
+        if self.attn_impl not in PAGED_ATTN_IMPLS:
+            raise ValueError(f"attn_impl must be one of {PAGED_ATTN_IMPLS}, "
+                             f"got {self.attn_impl!r}")
+        for fld in ("max_batch", "page_size", "max_prompt", "max_new_tokens",
+                    "max_queue", "prefill_bucket"):
+            if getattr(self, fld) < 1:
+                raise ValueError(f"{fld} must be >= 1, "
+                                 f"got {getattr(self, fld)}")
+        if self.num_pages - 1 < self.pages_per_request:
+            raise ValueError(
+                f"num_pages={self.num_pages} (1 reserved null page) cannot "
+                f"hold even one max-length request "
+                f"({self.pages_per_request} pages for "
+                f"{self.max_context} tokens @ page_size={self.page_size})")
+
+    @property
+    def max_context(self) -> int:
+        """Positions one request can occupy: prompt + decode budget."""
+        return self.max_prompt + self.max_new_tokens
+
+    @property
+    def pages_per_request(self) -> int:
+        """Page-table width: logical pages covering ``max_context``."""
+        return -(-self.max_context // self.page_size)
+
+    def replace(self, **kw) -> "ServeSpec":
         return replace(self, **kw)

@@ -88,6 +88,47 @@ def ring_all_gather_ref(strips: jax.Array) -> jax.Array:
     return jnp.broadcast_to(strips.reshape(1, G * n), (G, G * n))
 
 
+def paged_decode_attention_ref(q: jax.Array, pages_k: jax.Array,
+                               pages_v: jax.Array, page_table: jax.Array,
+                               lengths: jax.Array, *, window: int = 0,
+                               logit_softcap: float = 0.0) -> jax.Array:
+    """One-token attention over a PAGED KV cache (oracle for
+    ``kernels.paged_attn.paged_decode_attention``).
+
+    q: (B, Hq, D); pages_k/pages_v: (P, ps, Hkv, D) — the physical page
+    pool; page_table: (B, n) int32 physical page id per logical page;
+    lengths: (B,) int32 — number of VALID tokens per request (including the
+    one just written).  Logical position ``p`` of request ``b`` lives in
+    page ``page_table[b, p // ps]`` at offset ``p % ps``.  Positions
+    >= lengths are masked; ``window`` > 0 additionally masks positions
+    <= lengths - 1 - window (the ring-buffer SWA retention set: the last
+    ``window`` tokens).  Requires lengths >= 1 (a fully-masked request's
+    softmax would be degenerate — the serving engine never attends an
+    empty cache).
+    """
+    B, Hq, D = q.shape
+    _, ps, Hkv, _ = pages_k.shape
+    n = page_table.shape[1]
+    g = Hq // Hkv
+    scale = D ** -0.5
+    kg = pages_k[page_table].reshape(B, n * ps, Hkv, D).astype(jnp.float32)
+    vg = pages_v[page_table].reshape(B, n * ps, Hkv, D).astype(jnp.float32)
+    if g > 1:
+        kg = jnp.repeat(kg, g, axis=2)
+        vg = jnp.repeat(vg, g, axis=2)
+    qf = q.astype(jnp.float32) * scale                 # (B, Hq, D)
+    logits = jnp.einsum("bhd,bkhd->bhk", qf, kg)
+    logits = _softcap(logits, logit_softcap)
+    pos = jnp.arange(n * ps)[None, :]
+    valid = pos < lengths[:, None]
+    if window and window > 0:
+        valid &= pos > lengths[:, None] - 1 - window
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vg)
+    return out.astype(q.dtype)
+
+
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          cache_len, *, window: int = 0,
                          logit_softcap: float = 0.0) -> jax.Array:

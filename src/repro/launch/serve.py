@@ -1,48 +1,66 @@
-"""Serving launcher: batched prefill + decode with a reduced model.
+"""Serving launcher: continuous batching over the paged KV cache, through
+the ``ServeSpec -> compile_serve`` seam.
 
-``python -m repro.launch.serve --arch llama3-8b --smoke --batch 4 --new 32``
+``python -m repro.launch.serve --arch llama3-8b --smoke --requests 8``
+
+``--smoke`` defaults ON (this launcher's job is the CPU-sized demo/CI
+check); pass ``--no-smoke`` for the full-size config.  The old flag was
+``action="store_true"`` with ``default=True`` — impossible to turn off.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
+import numpy as np
 
-from repro.configs import ASSIGNED_ARCHS, get_config, smoke_variant
-from repro.core.sharding import ShardingCtx
-from repro.models import transformer
-from repro.serve import generate
+from repro.api import ServeSpec, compile_serve
+from repro.api.spec import PAGED_ATTN_IMPLS, SCHEDULER_POLICIES
+from repro.configs import ASSIGNED_ARCHS
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=list(ASSIGNED_ARCHS))
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=list(SCHEDULER_POLICIES))
+    ap.add_argument("--attn-impl", default="gather",
+                    choices=list(PAGED_ATTN_IMPLS))
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = smoke_variant(cfg)
-    if cfg.frontend:
-        raise SystemExit("serve demo supports token-in/token-out archs")
-    key = jax.random.PRNGKey(0)
-    params = transformer.init_params(cfg, key)
-    ctx = ShardingCtx()
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
+    spec = ServeSpec(arch=args.arch, smoke=args.smoke,
+                     max_batch=args.max_batch, page_size=args.page_size,
+                     num_pages=args.num_pages, max_prompt=args.prompt_len,
+                     max_new_tokens=args.new, scheduler=args.scheduler,
+                     attn_impl=args.attn_impl, temperature=args.temperature,
+                     seed=args.seed)
+    server = compile_serve(spec)
+
+    rng = np.random.default_rng(args.seed)
+    lengths = rng.integers(2, args.prompt_len + 1, size=args.requests)
+    for L in lengths:
+        server.submit(rng.integers(1, server.cfg.vocab_size, size=int(L)))
+
     t0 = time.perf_counter()
-    out = generate(params, cfg, ctx, prompt, args.new,
-                   temperature=args.temperature, key=key)
+    done = server.drain()
     dt = time.perf_counter() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.new / dt:.1f} tok/s)")
-    print(out[0][:16])
-    return out
+    n_tok = sum(len(r.tokens) for r in done)
+    print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s incl. compile) "
+          f"scheduler={spec.scheduler} preemptions="
+          f"{server.stats['preemptions']}")
+    print("first request:", done[0].output[:16].tolist())
+    return done
 
 
 if __name__ == "__main__":

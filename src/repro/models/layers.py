@@ -186,6 +186,77 @@ def attn_cache_axes(shape_kind: str = "default"):
                      ())
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedKVState:
+    """Block/paged KV cache: KV lives in fixed-size pages of a shared
+    physical pool instead of one dense per-request ring buffer.
+
+    pages_k/pages_v: (P, ps, Hkv, D) — the physical page pool (page 0 is
+    the serving engine's reserved null page: writes from idle batch slots
+    land there and are never attended).
+    page_table:      (B, n) int32 — physical page per logical page; rows of
+    idle slots point at the null page.
+    lengths:         (B,) int32 — tokens already stored per request BEFORE
+    the current decode token (same pre-increment convention as
+    ``AttnCache.length``); position ``p`` lives in page ``p // ps`` at
+    offset ``p % ps``.
+    impl:            static pytree metadata selecting the attention math —
+    ``"gather"`` (jnp page gather, the oracle path; runs anywhere) or
+    ``"pallas"`` (``kernels.paged_attn``: scalar-prefetch page gather into
+    VMEM, interpret mode off-TPU).
+    """
+    pages_k: jax.Array
+    pages_v: jax.Array
+    page_table: jax.Array
+    lengths: jax.Array
+    impl: str = "gather"
+
+
+jax.tree_util.register_dataclass(
+    PagedKVState,
+    data_fields=["pages_k", "pages_v", "page_table", "lengths"],
+    meta_fields=["impl"])
+
+
+def init_paged_kv_state(cfg: ModelConfig, batch: int, num_pages: int,
+                        page_size: int, pages_per_req: int,
+                        dtype=jnp.bfloat16, impl: str = "gather",
+                        ) -> PagedKVState:
+    shp = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return PagedKVState(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype),
+                        jnp.zeros((batch, pages_per_req), jnp.int32),
+                        jnp.zeros((batch,), jnp.int32), impl)
+
+
+def paged_decode_attention_block(cache: PagedKVState, q: jax.Array,
+                                 k_new: jax.Array, v_new: jax.Array, *,
+                                 window: int, logit_softcap: float):
+    """One decode token against the paged pool: write k/v at each request's
+    next position (through its page table), then attend the valid set.
+    q/k_new/v_new: (B, 1, H, D).  Returns (out (B, 1, Hq, D), new_cache)."""
+    B = q.shape[0]
+    ps = cache.pages_k.shape[1]
+    pos = cache.lengths                                     # (B,)
+    phys = jnp.take_along_axis(cache.page_table,
+                               (pos // ps)[:, None], axis=1)[:, 0]
+    off = pos % ps
+    kp = cache.pages_k.at[phys, off].set(k_new[:, 0].astype(cache.pages_k.dtype))
+    vp = cache.pages_v.at[phys, off].set(v_new[:, 0].astype(cache.pages_v.dtype))
+    total = pos + 1                                         # valid counts
+    if cache.impl == "pallas":
+        from repro.kernels.paged_attn import paged_decode_attention
+        out = paged_decode_attention(q[:, 0], kp, vp, cache.page_table,
+                                     total, window=window,
+                                     logit_softcap=logit_softcap)
+    else:
+        from repro.kernels.ref import paged_decode_attention_ref
+        out = paged_decode_attention_ref(q[:, 0], kp, vp, cache.page_table,
+                                         total, window=window,
+                                         logit_softcap=logit_softcap)
+    new_cache = PagedKVState(kp, vp, cache.page_table, total, cache.impl)
+    return out[:, None], new_cache
+
+
 def sharded_decode_attention(ctx: ShardingCtx, q: jax.Array,
                              cache: "AttnCache", k_new: jax.Array,
                              v_new: jax.Array, *, logit_softcap: float):
@@ -293,6 +364,16 @@ def attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
     v = ctx.constrain(v, "batch", "seq", "kv_heads", "head_dim")
 
     new_cache = None
+    if isinstance(cache, PagedKVState):
+        # ---- paged decode: write through the page table, gather pages ----
+        assert S == 1, "paged KV cache is decode-only (S == 1)"
+        out, new_cache = paged_decode_attention_block(
+            cache, q, k, v, window=window,
+            logit_softcap=cfg.attn_logit_softcap)
+        out = out.reshape(B, S, cfg.q_dim)
+        y = out @ p["wo"].astype(out.dtype)
+        y = ctx.constrain(y, "batch", "seq", "embed")
+        return x + y, new_cache
     if cache is not None and S == 1:
         # ---- decode: append to ring buffer, attend over it ----
         C = cache.k.shape[1]

@@ -143,6 +143,34 @@ def init_caches(cfg: ModelConfig, batch: int, context_len: int,
     return tuple(caches)
 
 
+ATTN_KINDS = (ATTN_GLOBAL, ATTN_LOCAL, BLOCK_SHARED_ATTN)
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
+                      page_size: int, pages_per_req: int,
+                      dtype=jnp.bfloat16, impl: str = "gather"):
+    """Paged-decode caches: tuple (per pattern entry) of per-repeat-stacked
+    :class:`~repro.models.layers.PagedKVState` — every (entry, repeat) layer
+    owns its own physical page pool; the per-request page table and lengths
+    are shared across layers (stacked so the scan can slice them).  Only
+    attention block kinds are supported (the serving engine rejects
+    SSM/hybrid archs before getting here)."""
+    R = cfg.pattern_repeats
+
+    def stack(make_one):
+        ones = [make_one() for _ in range(R)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ones)
+
+    caches = []
+    for kind in cfg.block_pattern:
+        if kind not in ATTN_KINDS:
+            raise ValueError(
+                f"paged KV caches support attention blocks only, got {kind!r}")
+        caches.append(stack(lambda: layers.init_paged_kv_state(
+            cfg, batch, num_pages, page_size, pages_per_req, dtype, impl)))
+    return tuple(caches)
+
+
 def cache_axes(cfg: ModelConfig):
     out = []
     for kind in cfg.block_pattern:

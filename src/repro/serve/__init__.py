@@ -1,1 +1,6 @@
 from repro.serve.decode import decode_step, generate, prefill  # noqa: F401
+from repro.serve.kvcache import (  # noqa: F401
+    PagedKVCache,
+    cache_bytes,
+    paged_cache_bytes,
+)

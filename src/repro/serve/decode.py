@@ -7,7 +7,7 @@ sampling for the examples."""
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,31 @@ def decode_step(params, cfg: ModelConfig, ctx: ShardingCtx,
     return logits[:, -1], caches
 
 
+# generate() used to wrap prefill/decode_step in a FRESH jax.jit per call,
+# recompiling both executables every invocation.  The compiled pairs are now
+# cached here, keyed by everything that shapes the computation (the frozen
+# cfg hashes; ShardingRules holds a dict, so the ctx is keyed by VALUE).
+# Server (repro.api.serve) owns its executables directly, same idea.
+_JIT_CACHE: Dict[Tuple, Tuple] = {}
+
+
+def _ctx_key(ctx: ShardingCtx) -> Tuple:
+    return (ctx.mesh, tuple(sorted(ctx.rules.rules.items())))
+
+
+def _compiled_pair(cfg: ModelConfig, ctx: ShardingCtx, capacity: int,
+                   long_ctx: bool = False):
+    """(jitted prefill, jitted decode_step) for one (cfg, ctx, capacity)."""
+    key = (cfg, _ctx_key(ctx), capacity, long_ctx)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = (
+            jax.jit(functools.partial(prefill, cfg=cfg, ctx=ctx,
+                                      capacity=capacity, long_ctx=long_ctx)),
+            jax.jit(functools.partial(decode_step, cfg=cfg, ctx=ctx,
+                                      long_ctx=long_ctx)))
+    return _JIT_CACHE[key]
+
+
 def generate(params, cfg: ModelConfig, ctx: ShardingCtx, prompt: jax.Array,
              max_new_tokens: int, *, temperature: float = 0.0,
              key: Optional[jax.Array] = None,
@@ -51,11 +76,8 @@ def generate(params, cfg: ModelConfig, ctx: ShardingCtx, prompt: jax.Array,
     """Greedy (temperature=0) or sampled generation.  prompt: (B, S)."""
     B, S = prompt.shape
     capacity = capacity or (S + max_new_tokens)
-    logits, caches = jax.jit(
-        functools.partial(prefill, cfg=cfg, ctx=ctx, capacity=capacity)
-    )(params, tokens=prompt)
-
-    step_jit = jax.jit(functools.partial(decode_step, cfg=cfg, ctx=ctx))
+    prefill_jit, step_jit = _compiled_pair(cfg, ctx, capacity)
+    logits, caches = prefill_jit(params, tokens=prompt)
 
     def sample(lg, k):
         if temperature <= 0:

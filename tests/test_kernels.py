@@ -208,3 +208,50 @@ def test_ring_hop_accum_matches_jnp(dtype):
         np.testing.assert_allclose(
             np.asarray(got, np.float32),
             np.asarray(recv + chunks[c], np.float32), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (kernels/paged_attn.py, scalar-prefetch page gather)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("window,softcap", [
+    (0, 0.0), (6, 0.0), (0, 30.0), (5, 50.0),
+])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_paged_decode_matches_oracle(window, softcap, dtype, tol):
+    from repro.kernels.paged_attn import paged_decode_attention
+    B, n, ps, Hq, Hkv, D, P = 3, 5, 4, 8, 2, 16, 20
+    pages_k = _arr(P, ps, Hkv, D, dtype=dtype)
+    pages_v = _arr(P, ps, Hkv, D, dtype=dtype)
+    q = _arr(B, Hq, D, dtype=dtype)
+    # non-contiguous layout: each request's logical pages scattered over the
+    # physical pool (never page 0, the null page)
+    pt = jnp.asarray(RNG.permutation(P - 1)[:B * n].reshape(B, n) + 1,
+                     jnp.int32)
+    lengths = jnp.asarray([1, 9, n * ps], jnp.int32)   # edge: 1 and full
+    got = paged_decode_attention(q, pages_k, pages_v, pt, lengths,
+                                 window=window, logit_softcap=softcap,
+                                 interpret=True)
+    want = ref.paged_decode_attention_ref(q, pages_k, pages_v, pt, lengths,
+                                          window=window,
+                                          logit_softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_ref_matches_dense_decode_ref():
+    """Identity page layout: the paged oracle must agree with the dense
+    ring-buffer decode oracle (same math, different cache addressing)."""
+    B, C, Hq, Hkv, D, ps = 2, 32, 4, 2, 16, 8
+    n = C // ps
+    P = 1 + B * n
+    pages_k, pages_v = _arr(P, ps, Hkv, D), _arr(P, ps, Hkv, D)
+    q = _arr(B, Hq, D)
+    pt = jnp.arange(1, P, dtype=jnp.int32).reshape(B, n)
+    lengths = jnp.asarray([5, C], jnp.int32)
+    dense_k = pages_k[1:].reshape(B, C, Hkv, D)
+    dense_v = pages_v[1:].reshape(B, C, Hkv, D)
+    paged = ref.paged_decode_attention_ref(q, pages_k, pages_v, pt, lengths)
+    dense = ref.decode_attention_ref(q[:, None], dense_k, dense_v, lengths)
+    np.testing.assert_allclose(paged, dense[:, 0], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,215 @@
+"""Serving engine tests.
+
+Four layers, matching the ServeSpec -> compile_serve stack:
+
+- analytic cache budgets (``cache_bytes`` / ``paged_cache_bytes``) pinned to
+  the ACTUAL buffer sizes ``init_caches`` / ``init_paged_caches`` allocate,
+  across every block kind the registry covers;
+- the host-side :class:`PagedKVCache` free-list allocator;
+- paged decode logits == dense ring-buffer decode logits, token by token,
+  for both the gather and the Pallas kernel impl;
+- the full Server against ``generate``: continuous batching (through
+  preemption churn) and the static policy must reproduce the dense greedy
+  tokens exactly, plus ServeSpec/admission validation.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ServeSpec, compile_serve
+from repro.configs import get_config, smoke_variant
+from repro.core.sharding import ShardingCtx
+from repro.models import layers, transformer
+from repro.serve.decode import generate
+from repro.serve.kvcache import PagedKVCache, cache_bytes, paged_cache_bytes
+
+RNG = np.random.default_rng(7)
+CTX = ShardingCtx()
+
+
+def _float_bytes(tree):
+    """Bytes across float leaves (the data buffers; int bookkeeping like
+    ring positions / page tables is excluded on both sides)."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree)
+               if jnp.issubdtype(l.dtype, jnp.floating))
+
+
+# ---------------------------------------------------------------------------
+# analytic budgets == actual buffers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [
+    "llama3-8b",       # global attention
+    "gemma2-2b",       # local/global interleave
+    "zamba2-2.7b",     # mamba + shared attention
+    "xlstm-125m",      # mlstm/slstm
+    "h2o-danube-3-4b",
+])
+@pytest.mark.parametrize("batch,ctx_len", [(2, 64), (3, 160)])
+def test_cache_bytes_matches_init_caches(arch, batch, ctx_len):
+    cfg = smoke_variant(get_config(arch))
+    caches = transformer.init_caches(cfg, batch, ctx_len)
+    assert cache_bytes(cfg, batch, ctx_len) == _float_bytes(caches)
+
+
+@pytest.mark.parametrize("num_pages,page_size", [(8, 4), (32, 16)])
+def test_paged_cache_bytes_matches_init_paged_caches(num_pages, page_size):
+    cfg = smoke_variant(get_config("llama3-8b"))
+    caches = transformer.init_paged_caches(cfg, 2, num_pages, page_size,
+                                           pages_per_req=4)
+    assert paged_cache_bytes(cfg, num_pages, page_size) == _float_bytes(caches)
+
+
+def test_init_paged_caches_rejects_ssm_blocks():
+    cfg = smoke_variant(get_config("zamba2-2.7b"))
+    with pytest.raises(ValueError, match="attention blocks only"):
+        transformer.init_paged_caches(cfg, 2, 8, 4, pages_per_req=2)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache free-list allocator
+# ---------------------------------------------------------------------------
+def test_allocator_reserves_null_page():
+    a = PagedKVCache(num_pages=8, page_size=4)
+    assert a.n_free == 7                       # page 0 never handed out
+    got = a.alloc(rid=1, n=7)
+    assert 0 not in got and sorted(got) == list(range(1, 8))
+
+
+def test_allocator_all_or_nothing_and_free():
+    a = PagedKVCache(num_pages=6, page_size=4)
+    assert a.alloc(1, 3) is not None
+    assert a.alloc(2, 3) is None               # only 2 left: nothing taken
+    assert a.n_free == 2 and a.n_owned(2) == 0
+    assert a.free(1) == 3
+    assert a.alloc(2, 3) is not None
+
+
+def test_allocator_ensure_grows_idempotently():
+    a = PagedKVCache(num_pages=8, page_size=2)
+    assert a.ensure(5, 2) and a.n_owned(5) == 2
+    assert a.ensure(5, 2) and a.n_owned(5) == 2    # no-op
+    assert a.ensure(5, 5) and a.n_owned(5) == 5
+    assert not a.ensure(5, 99) and a.n_owned(5) == 5
+    assert a.pages_for(1) == 1 and a.pages_for(2) == 1 and a.pages_for(3) == 2
+
+
+def test_allocator_page_row_pads_with_null():
+    a = PagedKVCache(num_pages=8, page_size=4)
+    got = a.alloc(3, 2)
+    row = a.page_row(3, width=5)
+    assert row.tolist() == got + [0, 0, 0]
+    assert a.page_row(42, width=3).tolist() == [0, 0, 0]   # unknown rid
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec validation / compile_serve arch gating
+# ---------------------------------------------------------------------------
+def test_servespec_validates():
+    with pytest.raises(ValueError, match="scheduler"):
+        ServeSpec(arch="llama3-8b", scheduler="fifo")
+    with pytest.raises(ValueError, match="attn_impl"):
+        ServeSpec(arch="llama3-8b", attn_impl="cuda")
+    with pytest.raises(ValueError, match="num_pages"):
+        ServeSpec(arch="llama3-8b", num_pages=4, max_prompt=64,
+                  max_new_tokens=64, page_size=16)
+    spec = ServeSpec(arch="llama3-8b", max_prompt=60, max_new_tokens=5,
+                     page_size=16)
+    assert spec.max_context == 65 and spec.pages_per_request == 5
+
+
+@pytest.mark.parametrize("arch,why", [
+    ("xlstm-125m", "attention blocks only"),    # slstm/mlstm pattern
+    ("zamba2-2.7b", "attention blocks only"),   # mamba hybrid
+    ("musicgen-medium", "codebook"),            # codebook heads
+    ("qwen2-vl-2b", "M-RoPE"),                  # vision frontend + mrope
+    ("vgg-a", "ModelConfig"),                   # CNN family
+])
+def test_compile_serve_rejects_unservable_archs(arch, why):
+    with pytest.raises(ValueError, match=why):
+        compile_serve(ServeSpec(arch=arch, smoke=True))
+
+
+# ---------------------------------------------------------------------------
+# paged decode == dense ring decode, token by token
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["llama3-8b", "gemma2-2b"])
+@pytest.mark.parametrize("impl", ["gather", "pallas"])
+def test_paged_forward_logits_match_dense(arch, impl):
+    cfg = smoke_variant(get_config(arch))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    B, T, ps, n = 2, 6, 4, 2                     # n*ps = 8 >= T
+    toks = jnp.asarray(RNG.integers(1, cfg.vocab_size, size=(B, T)),
+                       jnp.int32)
+    num_pages = 1 + B * n
+    dense = transformer.init_caches(cfg, B, T)
+    paged = transformer.init_paged_caches(cfg, B, num_pages, ps, n, impl=impl)
+    pt = jnp.arange(1, num_pages, dtype=jnp.int32).reshape(B, n)
+    R = cfg.pattern_repeats
+    pt_s = jnp.broadcast_to(pt[None], (R, B, n))
+
+    for t in range(T):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        ld, _, dense = transformer.forward(
+            params, cfg, CTX, tokens=toks[:, t:t + 1], positions=pos,
+            caches=dense)
+        len_s = jnp.full((R, B), t, jnp.int32)
+        paged = tuple(
+            layers.PagedKVState(c.pages_k, c.pages_v, pt_s, len_s, impl)
+            for c in paged)
+        lp, _, paged = transformer.forward(
+            params, cfg, CTX, tokens=toks[:, t:t + 1], positions=pos,
+            caches=paged)
+        np.testing.assert_allclose(lp, ld, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{arch}/{impl} step {t}")
+
+
+# ---------------------------------------------------------------------------
+# Server end-to-end vs dense generate
+# ---------------------------------------------------------------------------
+def _drain_and_compare(spec, n_req, max_new):
+    srv = compile_serve(spec)
+    V = srv.cfg.vocab_size
+    prompts = [RNG.integers(1, V, size=int(L)).astype(np.int32)
+               for L in RNG.integers(2, spec.max_prompt + 1, size=n_req)]
+    rids = [srv.submit(p, max_new) for p in prompts]
+    done = {r.rid: r for r in srv.drain()}
+    assert len(done) == n_req
+    for rid, p in zip(rids, prompts):
+        ref = np.asarray(generate(srv.params, srv.cfg, CTX,
+                                  p[None], max_new))[0]
+        np.testing.assert_array_equal(done[rid].output, ref)
+    return srv
+
+
+def test_server_continuous_with_preemption_matches_generate():
+    # 5 usable pages, up to 5 pages/request, 3 slots: forces preemptions
+    srv = _drain_and_compare(
+        ServeSpec(arch="llama3-8b", smoke=True, max_batch=3, page_size=4,
+                  num_pages=6, max_prompt=10, max_new_tokens=8),
+        n_req=5, max_new=5)
+    assert srv.stats["completed"] == 5
+    assert srv.alloc.n_free == srv.spec.num_pages - 1   # all pages returned
+
+
+def test_server_static_policy_matches_generate():
+    srv = _drain_and_compare(
+        ServeSpec(arch="llama3-8b", smoke=True, max_batch=2, page_size=4,
+                  num_pages=32, max_prompt=10, max_new_tokens=8,
+                  scheduler="static"),
+        n_req=4, max_new=4)
+    assert srv.stats["preemptions"] == 0
+
+
+def test_server_admission_control():
+    srv = compile_serve(ServeSpec(arch="llama3-8b", smoke=True, max_queue=2,
+                                  max_prompt=8, max_new_tokens=4))
+    with pytest.raises(ValueError, match="prompt length"):
+        srv.submit(np.ones(9, np.int32))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.submit(np.ones(4, np.int32), 5)
+    srv.submit(np.ones(4, np.int32))
+    srv.submit(np.ones(4, np.int32))
+    with pytest.raises(RuntimeError, match="max_queue"):
+        srv.submit(np.ones(4, np.int32))

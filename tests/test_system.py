@@ -332,7 +332,9 @@ def test_train_launcher_smoke():
 
 def test_serve_launcher_smoke():
     from repro.launch import serve as serve_launcher
-    out = serve_launcher.main([
-        "--arch", "llama3-8b", "--batch", "2", "--prompt-len", "8",
-        "--new", "4"])
-    assert out.shape == (2, 4)
+    done = serve_launcher.main([
+        "--arch", "llama3-8b", "--requests", "2", "--max-batch", "2",
+        "--prompt-len", "8", "--new", "4", "--num-pages", "16",
+        "--page-size", "4"])
+    assert len(done) == 2
+    assert all(len(r.tokens) == 4 for r in done)
