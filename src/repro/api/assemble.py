@@ -38,8 +38,8 @@ from repro.comm.bucketer import CommConfig
 from repro.configs import get_config, smoke_variant
 from repro.core.params import Spec
 from repro.core.sharding import ShardingCtx, ShardingRules
-from repro.launch.mesh import make_host_mesh
-from repro.optim import AdamW, MomentumSGD, constant, warmup_cosine
+from repro.launch.mesh import make_cluster_mesh, make_host_mesh
+from repro.optim import AdamW, MomentumSGD, constant, linear_scale_warmup, warmup_cosine
 from repro.optim.dist import make_distributed_update, make_overlapped_update
 from repro.train import make_overlapped_train_step, make_train_step, zero1_state_shardings
 
@@ -58,11 +58,16 @@ def _make_optimizer(spec: RunSpec, family: FamilyAdapter):
                        weight_decay=0.0 if wd is None else wd)
 
 
-def _make_schedule(spec: RunSpec):
+def _make_schedule(spec: RunSpec, data_ways: int = 1):
     if spec.schedule == "constant":
         return constant(spec.lr)
     warmup = spec.warmup_steps if spec.warmup_steps is not None \
         else max(spec.steps // 20, 1)
+    if spec.schedule == "linear-scale-warmup":
+        # Goyal et al.: peak LR scales with the global data-parallel ways
+        # (the G members splitting the global batch), gradual warmup from
+        # the unscaled base LR
+        return linear_scale_warmup(spec.lr, data_ways, warmup, spec.steps)
     return warmup_cosine(spec.lr, warmup, spec.steps)
 
 
@@ -91,7 +96,10 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
 
     mesh = None
     if spec.parallel != "serial":
-        mesh = make_host_mesh(spec.mesh.model_ways, pods=spec.mesh.pods)
+        if spec.mesh.cluster:
+            mesh = make_cluster_mesh(spec.mesh.model_ways)
+        else:
+            mesh = make_host_mesh(spec.mesh.model_ways, pods=spec.mesh.pods)
     rules = rules if rules is not None else ShardingRules()
     ctx = ShardingCtx(mesh, rules)
     loss_fn = family.make_loss(cfg, ctx)
@@ -101,10 +109,15 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
         params = _place_params(params, family, cfg, mesh, rules)
 
     optimizer = _make_optimizer(spec, family)
-    lr_schedule = _make_schedule(spec)
+    data_ways = 1
+    if mesh is not None:
+        for a in _data_axes(mesh):
+            data_ways *= mesh.shape[a]
+    lr_schedule = _make_schedule(spec, data_ways)
 
     dist_update = None
     train_step = None
+    comm = None
     if spec.parallel == "zero1":
         axes = _data_axes(mesh)
         comm = spec.comm if spec.comm is not None \
@@ -147,7 +160,7 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
     return Run(spec=spec, cfg=cfg, family=family, mesh=mesh, rules=rules,
                ctx=ctx, loss_fn=loss_fn, optimizer=optimizer,
                lr_schedule=lr_schedule, train_step=train_step,
-               params=params, opt_state=opt_state)
+               params=params, opt_state=opt_state, comm=comm)
 
 
 def compile_serve(spec: ServeSpec, params=None,

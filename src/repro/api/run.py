@@ -39,6 +39,9 @@ class Run:
     train_step: Callable            # (params, opt_state, step, batch) -> ...
     params: Any
     opt_state: Any
+    comm: Optional[Any] = None      # the RESOLVED CommConfig of a zero1 run
+    #                                 (None for other modes) — needed to
+    #                                 re-plan strip state across world sizes
     _data: Optional[Prefetcher] = field(default=None, repr=False)
     _jit_step: Optional[Callable] = field(default=None, repr=False)
     _warm: bool = field(default=False, repr=False)  # jit_step executed once
@@ -92,19 +95,66 @@ class Run:
         self._warm = True
         return metrics
 
+    def _zero1_world(self):
+        """This run's zero1 world layout (the ``checkpoint.replan`` meta
+        record), or None when the run has no strip state."""
+        if self.comm is None or self.mesh is None:
+            return None
+        from repro.checkpoint.replan import world_meta
+        axes = tuple(a for a in ("pod", "data")
+                     if a in self.mesh.axis_names)
+        return world_meta([self.mesh.shape[a] for a in axes],
+                          self.comm.hierarchical, self.comm.bucket_bytes)
+
+    def _ckpt_meta(self):
+        world = self._zero1_world()
+        return {"zero1": world} if world is not None else None
+
+    def _restore_replan(self, step: int):
+        """Strict restore failed on shape: the checkpoint was saved at a
+        different world size.  Re-plan the strip opt_state for THIS world
+        (see ``checkpoint.replan`` for why this is exact); params are
+        replicated, so their shapes never depend on G and restore
+        strictly."""
+        from repro.checkpoint.replan import replan_strip_state
+        from repro.comm.bucketer import plan_buckets
+        new_world = self._zero1_world()
+        old_world = ckpt_lib.read_manifest(
+            self.spec.ckpt_dir, step)["meta"].get("zero1")
+        if new_world is None or old_world is None:
+            raise ValueError(
+                f"checkpoint step {step} does not match this run's shapes "
+                "and carries no zero1 world meta to re-plan from")
+        trees, _ = ckpt_lib.restore(self.spec.ckpt_dir, step,
+                                    params=self.params)
+        old_leaves = ckpt_lib.restore_loose(self.spec.ckpt_dir, step,
+                                            "opt_state", self.opt_state)
+        plan = plan_buckets(self.params, new_world["G"],
+                            self.comm.bucket_bytes)
+        trees["opt_state"] = replan_strip_state(
+            self.opt_state, old_leaves, plan, old_world, new_world)
+        return trees
+
     def restore(self, step: int):
         """Load checkpoint ``step`` from ``spec.ckpt_dir`` and place the
         restored trees back onto this run's shardings (zero1 strip
-        opt_state lands on its data-axis strips, not unplaced on device 0)."""
-        trees, _ = ckpt_lib.restore(self.spec.ckpt_dir, step,
-                                    params=self.params,
-                                    opt_state=self.opt_state)
+        opt_state lands on its data-axis strips, not unplaced on device 0).
+        A zero1 checkpoint saved at a DIFFERENT world size is re-planned
+        (``checkpoint.replan``) instead of rejected — the elastic
+        shrink-and-resume path."""
+        try:
+            trees, _ = ckpt_lib.restore(self.spec.ckpt_dir, step,
+                                        params=self.params,
+                                        opt_state=self.opt_state)
+        except ValueError:
+            trees = self._restore_replan(step)
         placed = jax.tree.map(
             lambda cur, new: jax.device_put(new, cur.sharding),
             {"params": self.params, "opt_state": self.opt_state}, trees)
         self.params, self.opt_state = placed["params"], placed["opt_state"]
 
-    def fit(self, start_step: Optional[int] = None, log_fn=print):
+    def fit(self, start_step: Optional[int] = None, log_fn=print,
+            on_step: Optional[Callable] = None):
         """Train for ``spec.steps`` steps; returns the metrics history.
 
         ``start_step=None`` (the default) resumes from the latest checkpoint
@@ -112,7 +162,9 @@ class Run:
         restored onto the run's shardings and the (deterministic, seeded)
         data stream is fast-forwarded one batch per completed step so the
         trajectory continues exactly where the interrupted run left off.
-        Pass ``start_step=0`` to force a fresh run."""
+        Pass ``start_step=0`` to force a fresh run.  ``on_step`` is called
+        with (step+1) after every dispatched step — the cluster launcher's
+        heartbeat hook."""
         s = self.spec
         if start_step is None:
             start_step = 0
@@ -134,7 +186,8 @@ class Run:
             # up the prefetch thread / device-place batches for a no-op
             return []
         tcfg = TrainerConfig(total_steps=s.steps, log_every=s.log_every,
-                             ckpt_every=s.ckpt_every, ckpt_dir=s.ckpt_dir)
+                             ckpt_every=s.ckpt_every, ckpt_dir=s.ckpt_dir,
+                             ckpt_meta=self._ckpt_meta(), on_step=on_step)
         trainer = Trainer(self.jit_step, tcfg, jit=False, warm=self._warm)
         with self._mesh_scope():
             self.params, self.opt_state, history = trainer.fit(

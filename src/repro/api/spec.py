@@ -38,7 +38,7 @@ from repro.comm.bucketer import CommConfig
 
 PARALLEL_MODES = ("serial", "dp", "zero1", "zero1-gspmd")
 OPTIMIZERS = ("adamw", "sgd")
-SCHEDULES = ("warmup_cosine", "constant")
+SCHEDULES = ("warmup_cosine", "constant", "linear-scale-warmup")
 
 SCHEDULER_POLICIES = ("static", "continuous")
 PAGED_ATTN_IMPLS = ("gather", "pallas")
@@ -50,9 +50,17 @@ MIB = 2 ** 20
 class MeshSpec:
     """Host-mesh topology: ``("pod", "data", "model")`` when ``pods > 1``,
     ``("data", "model")`` otherwise; the data extent is whatever remains of
-    the visible devices after pods x model_ways."""
+    the visible devices after pods x model_ways.
+
+    ``cluster=True`` builds the mesh over a live ``jax.distributed``
+    process group instead (``launch.mesh.make_cluster_mesh``): the "pod"
+    axis becomes the PROCESS (host) boundary — one pod per process, so the
+    hierarchical schedule's cross-pod hop runs over the genuine cross-host
+    link.  ``pods`` is ignored in that case (the process count decides);
+    the caller must have run ``repro.cluster.initialize`` first."""
     pods: int = 1
     model_ways: int = 1
+    cluster: bool = False
 
     def __post_init__(self):
         assert self.pods >= 1 and self.model_ways >= 1, (

@@ -1,2 +1,13 @@
-from repro.checkpoint import ckpt  # noqa: F401
-from repro.checkpoint.ckpt import latest_step, restore, save  # noqa: F401
+from repro.checkpoint import ckpt, replan  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    latest_step,
+    read_manifest,
+    restore,
+    restore_loose,
+    save,
+)
+from repro.checkpoint.replan import (  # noqa: F401
+    replan_strip_leaf,
+    replan_strip_state,
+    world_meta,
+)

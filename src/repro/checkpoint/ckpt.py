@@ -1,14 +1,25 @@
 """Checkpointing: flattened-pytree npz + JSON manifest.
 
-Arrays are gathered to host (fine at example scale; sharded per-host writes
-would slot in here on a real cluster — the manifest format already records
-per-leaf paths)."""
+Arrays are gathered to host before writing.  On a multi-process cluster a
+leaf may not be fully addressable (zero1 optimizer strips live sharded
+over the cross-host "pod" axis), so gathering goes through
+``multihost_utils.process_allgather`` — a COLLECTIVE, which every process
+must enter; only process 0 then touches the filesystem, and it writes
+tmp + ``os.replace`` with the ``.npz`` last so a checkpoint either exists
+completely or not at all (a worker killed mid-save must never leave a
+torn "latest" checkpoint for the elastic restart to trip over).
+
+The manifest carries an optional ``meta`` dict.  The trainer records the
+zero1 world layout there (group size, axis sizes, hierarchical flag,
+bucket bytes) so a restart at a DIFFERENT world size can re-plan the strip
+state instead of failing the shape check — see ``checkpoint.replan``.
+"""
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,22 +41,46 @@ def _key_str(path) -> str:
     return "/".join(parts)
 
 
-def save(directory: str, step: int, **trees) -> str:
+def _to_host(leaf) -> np.ndarray:
+    """Global host value of ``leaf``.  Fully-addressable arrays (every
+    single-process array) fetch directly; a multihost-sharded array needs
+    the collective allgather — every process must reach this line."""
+    if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(leaf,
+                                                            tiled=True))
+    return np.asarray(jax.device_get(leaf))
+
+
+def _manifest_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.json")
+
+
+def save(directory: str, step: int, meta: Optional[Dict[str, Any]] = None,
+         **trees) -> str:
     os.makedirs(directory, exist_ok=True)
     payload: Dict[str, np.ndarray] = {}
-    manifest: Dict[str, Any] = {"step": step, "trees": {}}
+    manifest: Dict[str, Any] = {"step": step, "trees": {},
+                                "meta": meta or {}}
     for name, tree in trees.items():
         flat = jax.tree_util.tree_flatten_with_path(tree)[0]
         keys = []
         for path, leaf in flat:
             k = f"{name}:{_key_str(path)}"
-            payload[k] = np.asarray(jax.device_get(leaf))
+            payload[k] = _to_host(leaf)   # collective on a cluster
             keys.append(k)
         manifest["trees"][name] = keys
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **payload)
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+    if jax.process_index() != 0:
+        return path   # every process gathered; one writes
+    # manifest first, npz last: the .npz is what latest_step keys on, so
+    # its appearance commits the checkpoint atomically
+    mpath = _manifest_path(directory, step)
+    with open(mpath + ".tmp", "w") as f:
         json.dump(manifest, f)
+    os.replace(mpath + ".tmp", mpath)
+    np.savez(path + ".tmp.npz", **payload)
+    os.replace(path + ".tmp.npz", path)
     return path
 
 
@@ -55,6 +90,15 @@ def latest_step(directory: str) -> Optional[int]:
     steps = [int(m.group(1)) for f in os.listdir(directory)
              if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
     return max(steps) if steps else None
+
+
+def read_manifest(directory: str, step: int) -> Dict[str, Any]:
+    """The checkpoint's JSON manifest (``step``, ``trees``, ``meta``).
+    Pre-meta checkpoints get an empty ``meta`` dict."""
+    with open(_manifest_path(directory, step)) as f:
+        manifest = json.load(f)
+    manifest.setdefault("meta", {})
+    return manifest
 
 
 def restore(directory: str, step: int, **templates) -> Tuple[Dict[str, Any], int]:
@@ -90,3 +134,26 @@ def restore(directory: str, step: int, **templates) -> Tuple[Dict[str, Any], int
             leaves.append(jnp.asarray(arr))
         out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
     return out, step
+
+
+def restore_loose(directory: str, step: int, name: str,
+                  template) -> List[np.ndarray]:
+    """The saved leaves of tree ``name`` in ``template``'s flatten order,
+    as raw host arrays with NO shape/dtype validation — the input to
+    ``checkpoint.replan`` when the saved world size differs from the
+    current one (strip leaves then legitimately have different shapes).
+    Structure must still match (``KeyError`` otherwise)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no checkpoint at {path}")
+    data = np.load(path)
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for leaf_path, _leaf in flat:
+        k = f"{name}:{_key_str(leaf_path)}"
+        if k not in data.files:
+            raise KeyError(
+                f"checkpoint {path} has no leaf {k!r} — was the tree "
+                f"structure changed since the save?")
+        leaves.append(data[k])
+    return leaves

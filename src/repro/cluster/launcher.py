@@ -1,0 +1,152 @@
+"""Localhost multi-process launcher for the cluster subsystem.
+
+Spawns N worker processes, each a fresh ``python -m repro.launch.cluster``
+interpreter with the :class:`~repro.cluster.spec.ClusterSpec` env vars set
+(and ``XLA_FLAGS=--xla_force_host_platform_device_count=<local>`` exported
+BEFORE the worker imports jax — device counts are fixed at backend init, so
+they can only be chosen from outside the process).  Worker 0 inherits the
+launcher's stdout (live progress); the others log to files in the run
+directory, printed back on failure.
+
+Liveness is tracked two ways, consumed by ``cluster.elastic``:
+
+  * the OS process itself (``Popen.poll`` — a crash or a SIGKILL chaos
+    injection is detected within one poll interval);
+  * a per-worker heartbeat file the training loop touches every step
+    (``Run.fit(on_step=...)``), which catches the nastier failure mode of
+    a worker that is alive but wedged in a collective whose peer died.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import socket
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.cluster.spec import ClusterSpec
+
+ENV_HEARTBEAT_FILE = "REPRO_HEARTBEAT_FILE"
+ENV_RESULT_FILE = "REPRO_RESULT_FILE"
+
+
+def free_port() -> int:
+    """An OS-assigned free TCP port for the coordinator (bind-to-0 probe)."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+@dataclass
+class WorkerHandle:
+    """One spawned worker: its process, identity, and liveness files."""
+    proc: subprocess.Popen
+    process_id: int
+    hb_file: str
+    log_file: Optional[str]
+
+    def heartbeat(self) -> Optional[tuple]:
+        """(mtime, last completed step) of the worker's heartbeat, or None
+        before the first beat."""
+        try:
+            with open(self.hb_file) as f:
+                txt = f.read().strip()
+            return os.path.getmtime(self.hb_file), int(txt or "0")
+        except (OSError, ValueError):
+            return None
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def kill(self, grace: float = 3.0) -> None:
+        """Terminate (then SIGKILL) this worker and reap it."""
+        if self.proc.poll() is not None:
+            return
+        self.proc.terminate()
+        deadline = time.monotonic() + grace
+        while time.monotonic() < deadline and self.proc.poll() is None:
+            time.sleep(0.05)
+        if self.proc.poll() is None:
+            self.proc.kill()
+        self.proc.wait()
+
+    def tail_log(self, nbytes: int = 4000) -> str:
+        if not self.log_file or not os.path.exists(self.log_file):
+            return ""
+        with open(self.log_file, "rb") as f:
+            f.seek(0, os.SEEK_END)
+            size = f.tell()
+            f.seek(max(0, size - nbytes))
+            return f.read().decode(errors="replace")
+
+
+def _worker_env(spec: ClusterSpec, hb_file: str,
+                result_file: Optional[str]) -> dict:
+    env = dict(os.environ)
+    env.update(spec.env())
+    env[ENV_HEARTBEAT_FILE] = hb_file
+    if result_file:
+        env[ENV_RESULT_FILE] = result_file
+    # the forced host device count must be in place before the worker's
+    # first jax import; append so user-set XLA flags survive
+    flag = (f"--xla_force_host_platform_device_count="
+            f"{spec.local_devices}")
+    prev = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = f"{prev} {flag}".strip()
+    return env
+
+
+def result_path(run_dir: str) -> str:
+    return os.path.join(run_dir, "result.json")
+
+
+def spawn_workers(num_processes: int, worker_argv: Sequence[str],
+                  run_dir: str, attempt: int = 0,
+                  local_devices: int = 1,
+                  coordinator: Optional[str] = None,
+                  ) -> List[WorkerHandle]:
+    """Spawn ``num_processes`` workers of ``python -m repro.launch.cluster
+    <worker_argv>`` and return their handles.  ``attempt`` namespaces the
+    heartbeat files so a relaunched cluster never reads a dead
+    generation's beats."""
+    os.makedirs(run_dir, exist_ok=True)
+    coordinator = coordinator or f"localhost:{free_port()}"
+    handles: List[WorkerHandle] = []
+    for pid in range(num_processes):
+        spec = ClusterSpec(coordinator=coordinator,
+                           num_processes=num_processes,
+                           process_id=pid, local_devices=local_devices)
+        hb = os.path.join(run_dir, f"hb_a{attempt}_w{pid}")
+        env = _worker_env(spec, hb,
+                          result_path(run_dir) if pid == 0 else None)
+        log = None
+        out = None
+        if pid != 0:
+            # worker 0 narrates to the launcher's stdout; the rest log to
+            # files (printed back on failure)
+            log = os.path.join(run_dir, f"worker_a{attempt}_w{pid}.log")
+            out = open(log, "wb")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.cluster"]
+            + list(worker_argv),
+            env=env, stdout=out, stderr=subprocess.STDOUT if out else None)
+        if out is not None:
+            out.close()   # the child owns the fd now
+        handles.append(WorkerHandle(proc=proc, process_id=pid,
+                                    hb_file=hb, log_file=log))
+    return handles
+
+
+def kill_workers(handles: Sequence[WorkerHandle]) -> None:
+    for h in handles:
+        h.kill()
+
+
+def sigkill(handle: WorkerHandle) -> None:
+    """Hard-kill one worker (the chaos injection: no cleanup, no goodbye —
+    exactly what a node loss looks like to the rest of the cluster)."""
+    if handle.proc.poll() is None:
+        handle.proc.send_signal(signal.SIGKILL)

@@ -44,14 +44,21 @@ class CommConfig:
                    ``"lax"`` (XLA collectives — the seed behavior) or
                    ``"pallas-ring"`` (the paper's explicit §3.4 ring with
                    the per-hop combine in a Pallas kernel).  Under the
-                   hierarchical schedule this drives the IN-POD level; the
-                   cross-pod hop stays on lax (see ``make_schedule``).
+                   hierarchical schedule this drives the IN-POD level.
+    cross_backend: collective backend for the CROSS-POD hop of the
+                   hierarchical schedule (ignored by the flat one).
+                   Defaults to ``"lax"`` — on a real cluster the pod axis
+                   is the process boundary (``launch.mesh.make_cluster_mesh``)
+                   and lax lowers to the runtime's cross-host collectives
+                   (gloo on CPU), which is the backend slot the multi-host
+                   subsystem fills.
     """
     bucket_bytes: int = 4 * 2**20
     reduce_dtype: str = "float32"
     hierarchical: bool = False
     overlap: bool = False
     backend: str = "lax"
+    cross_backend: str = "lax"
 
     def __post_init__(self):
         # real exceptions, not asserts: config validation must survive -O
@@ -60,10 +67,11 @@ class CommConfig:
                 f"reduce_dtype must be 'float32' or 'bfloat16', "
                 f"got {self.reduce_dtype!r}")
         from repro.comm.backends import COLLECTIVE_BACKENDS
-        if self.backend not in COLLECTIVE_BACKENDS:
-            raise ValueError(
-                f"backend must be one of {COLLECTIVE_BACKENDS}, "
-                f"got {self.backend!r}")
+        for fld in ("backend", "cross_backend"):
+            if getattr(self, fld) not in COLLECTIVE_BACKENDS:
+                raise ValueError(
+                    f"{fld} must be one of {COLLECTIVE_BACKENDS}, "
+                    f"got {getattr(self, fld)!r}")
 
     @property
     def wire_dtype(self):

@@ -124,7 +124,8 @@ def make_overlap_grad(loss_fn: Callable, axes: AxisNames, comm: CommConfig,
     same owner layout) ``make_overlapped_update`` consumes.  The reduces
     issued by the hooks go through ``comm.backend``'s collectives.
     """
-    sched = make_schedule(axes, comm.hierarchical, comm.backend)
+    sched = make_schedule(axes, comm.hierarchical, comm.backend,
+                          comm.cross_backend)
 
     def overlap_grad(params, batch):
         plan = plan_buckets(params, G, comm.bucket_bytes)

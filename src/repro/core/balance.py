@@ -303,6 +303,31 @@ RING_BACKEND_MODELS = {
 }
 
 
+# Cross-HOST link regimes for the cluster subsystem (repro.cluster): when
+# the "pod" axis is a process/host boundary (launch.mesh.make_cluster_mesh),
+# the hierarchical schedule's cross-pod hop crosses one of these links, not
+# the in-node fabric.  (link bytes/s per direction, per-message SWlat s) —
+# the paper's §5 hardware: FDR InfiniBand on the Endeavor cluster (RDMA, the
+# §3.2 calibration SWlat) and 10GbE Ethernet on the 16-node AWS cluster
+# (~14X on 16 — kernel TCP stack, ~10x the per-message software latency).
+CROSS_HOST_REGIMES = {
+    "infiniband-fdr": (56e9 / 8, 5e-6),
+    "ethernet-10gbe": (10e9 / 8, 50e-6),
+}
+
+
+def cross_host_hw(hw: HardwareConfig, regime: str) -> HardwareConfig:
+    """``hw`` with its link constants replaced by a cross-host regime's —
+    feed the result to ``hierarchical_allreduce_time`` (with ``pod_bw`` set
+    to the fast in-host bandwidth) to model a multi-host cluster step."""
+    if regime not in CROSS_HOST_REGIMES:
+        raise ValueError(f"unknown cross-host regime {regime!r}; "
+                         f"known: {tuple(CROSS_HOST_REGIMES)}")
+    bw, lat = CROSS_HOST_REGIMES[regime]
+    return dataclasses.replace(hw, name=f"{hw.name}+{regime}",
+                               link_bw=bw, sw_latency=lat)
+
+
 def backend_hw(hw: HardwareConfig, backend: str) -> HardwareConfig:
     """``hw`` with the backend's latency/bandwidth constants applied —
     the one place backend names enter the §3.2 closed forms."""

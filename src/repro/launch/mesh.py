@@ -10,6 +10,8 @@ Functions, not module constants: importing this module never touches jax
 device state (the dry-run sets XLA_FLAGS before any jax import)."""
 from __future__ import annotations
 
+import warnings
+
 import jax
 from jax.sharding import AxisType, Mesh
 
@@ -28,15 +30,42 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
+def _divisible_factorization(n: int, model_ways: int, pods: int):
+    """Largest factorization (model_ways', pods') with model_ways' <=
+    model_ways and pods' <= pods such that ``pods' * model_ways'`` divides
+    ``n`` — i.e. the data axis absorbs EVERY device.  Model ways take
+    priority (shrinking the model group changes the math less than silently
+    training on fewer devices); always terminates at (1, 1)."""
+    for mw in range(model_ways, 0, -1):
+        for p in range(min(pods, n // mw), 0, -1):
+            if n % (mw * p) == 0:
+                return mw, p
+    return 1, 1
+
+
 def make_host_mesh(model_ways: int = 1, pods: int = 1) -> Mesh:
     """Best-effort mesh over whatever devices exist (examples, tests).
 
     ``pods > 1`` asks for the three-axis ("pod", "data", "model") topology
     (the §3.3 group composition); both counts are clamped to what the host
-    actually has, so a 1-device box degrades to a (1, 1) mesh."""
+    actually has, so a 1-device box degrades to a (1, 1) mesh.  A request
+    that does not divide the device count (e.g. 6 devices, model_ways=4)
+    used to silently train on a subset of ``jax.devices()``; now the
+    largest divisible factorization is preferred and a warning names what
+    changed."""
     n = len(jax.devices())
     model_ways = max(1, min(model_ways, n))
     pods = max(1, min(pods, n // model_ways))
+    if n % (model_ways * pods):
+        dropped = n - pods * (n // (model_ways * pods)) * model_ways
+        mw2, p2 = _divisible_factorization(n, model_ways, pods)
+        warnings.warn(
+            f"make_host_mesh: model_ways={model_ways} x pods={pods} does "
+            f"not divide the {n} visible devices and would silently drop "
+            f"{dropped} of them; using the largest divisible factorization "
+            f"model_ways={mw2} x pods={p2} instead (all {n} devices used)",
+            stacklevel=2)
+        model_ways, pods = mw2, p2
     data = n // (model_ways * pods)
     if pods > 1:
         shape = (pods, data, model_ways)
@@ -47,6 +76,44 @@ def make_host_mesh(model_ways: int = 1, pods: int = 1) -> Mesh:
     ndev = pods * data * model_ways
     return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev],
                          axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_cluster_mesh(model_ways: int = 1) -> Mesh:
+    """Multi-host mesh for a ``jax.distributed`` cluster: the "pod" axis IS
+    the process (host) boundary, so the cross-pod hop of
+    ``HierarchicalSchedule`` runs over the genuine cross-host link while the
+    in-pod ring stays on each host's local devices.
+
+    Axes ("pod", "data", "model") = (process_count, local//model_ways,
+    model_ways); falls back to :func:`make_host_mesh` when there is only one
+    process (a 1-process "cluster" is just the host).  Devices are grouped
+    by ``process_index`` — jax guarantees equal local device counts are not
+    required in general, but this mesh is, so ragged clusters are rejected.
+    """
+    nproc = jax.process_count()
+    if nproc == 1:
+        return make_host_mesh(model_ways)
+    devs = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    local = len(devs) // nproc
+    per_proc = {}
+    for d in devs:
+        per_proc[d.process_index] = per_proc.get(d.process_index, 0) + 1
+    if len(set(per_proc.values())) != 1:
+        raise RuntimeError(
+            f"cluster mesh needs the same local device count on every "
+            f"process, got {per_proc}")
+    model_ways = max(1, min(model_ways, local))
+    if local % model_ways:
+        warnings.warn(
+            f"make_cluster_mesh: model_ways={model_ways} does not divide "
+            f"the {local} local devices per process; dropping to "
+            f"model_ways={_divisible_factorization(local, model_ways, 1)[0]}",
+            stacklevel=2)
+        model_ways = _divisible_factorization(local, model_ways, 1)[0]
+    data = local // model_ways
+    return jax.make_mesh((nproc, data, model_ways),
+                         ("pod", "data", "model"), devices=devs,
+                         axis_types=(AxisType.Auto,) * 3)
 
 
 def mesh_devices(mesh: Mesh) -> int:

@@ -24,37 +24,49 @@ from __future__ import annotations
 
 import argparse
 
-from repro.api import MIB, PARALLEL_MODES, MeshSpec, RunSpec, compile_run
+from repro.api import MIB, PARALLEL_MODES, SCHEDULES, MeshSpec, RunSpec, compile_run
 from repro.comm import COLLECTIVE_BACKENDS, CommConfig
 from repro.configs import ALL_ARCHS
 
 WIRE_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
 
 
-def spec_from_args(args) -> RunSpec:
+def comm_flags_set(args) -> bool:
+    """True when any explicit-bucketed-collectives flag departs from its
+    default (these require --parallel zero1)."""
+    return (args.bucket_mb is not None or args.wire_dtype != "fp32"
+            or args.overlap or args.comm_backend != "lax"
+            or args.cross_backend is not None)
+
+
+def spec_from_args(args, cluster: bool = False) -> RunSpec:
     comm = None
-    if args.bucket_mb is not None or args.wire_dtype != "fp32" \
-            or args.overlap or args.comm_backend != "lax":
+    if comm_flags_set(args):
         bucket_mb = 4.0 if args.bucket_mb is None else args.bucket_mb
         comm = CommConfig(bucket_bytes=int(bucket_mb * MIB),
                           reduce_dtype=WIRE_DTYPES[args.wire_dtype],
-                          hierarchical=args.pods > 1,
+                          hierarchical=args.pods > 1 or cluster,
                           overlap=args.overlap,
-                          backend=args.comm_backend)
+                          backend=args.comm_backend,
+                          cross_backend=args.cross_backend or "lax")
     ckpt_every = 0
     if args.ckpt_dir:
         ckpt_every = args.ckpt_every if args.ckpt_every \
             else max(args.steps // 5, 1)
     return RunSpec(
         arch=args.arch, smoke=args.smoke, parallel=args.parallel,
-        mesh=MeshSpec(pods=args.pods, model_ways=args.model_ways),
+        mesh=MeshSpec(pods=args.pods, model_ways=args.model_ways,
+                      cluster=cluster),
         comm=comm, optimizer=args.optimizer, lr=args.lr,
+        schedule=args.schedule,
         steps=args.steps, batch=args.batch, seq=args.seq, seed=args.seed,
         log_every=5, ckpt_every=ckpt_every, ckpt_dir=args.ckpt_dir)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def add_run_args(ap: argparse.ArgumentParser, parallel_default: str = "dp"):
+    """The training-run flag set, shared with the multi-host launcher
+    (``repro.launch.cluster``) so a cluster run is configured with exactly
+    the flags a single-process run is."""
     ap.add_argument("--arch", required=True, choices=list(ALL_ARCHS))
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
@@ -62,7 +74,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--parallel", default="dp", choices=list(PARALLEL_MODES),
+    ap.add_argument("--schedule", default="warmup_cosine",
+                    choices=list(SCHEDULES),
+                    help="LR schedule; linear-scale-warmup is Goyal et "
+                         "al.'s large-batch recipe (peak = lr x the "
+                         "data-parallel ways, gradual warmup from lr)")
+    ap.add_argument("--parallel", default=parallel_default,
+                    choices=list(PARALLEL_MODES),
                     help="serial | dp (pjit/GSPMD) | zero1 (explicit "
                          "bucketed §3.4 strips) | zero1-gspmd")
     ap.add_argument("--pods", type=int, default=1,
@@ -84,6 +102,11 @@ def main(argv=None):
                          "schedules: lax (XLA collectives) or pallas-ring "
                          "(the paper's explicit §3.4 ring; in-pod only "
                          "under --pods>1, the cross-pod hop stays lax)")
+    ap.add_argument("--cross-backend", default=None,
+                    choices=list(COLLECTIVE_BACKENDS),
+                    help="collective implementation for the CROSS-POD hop "
+                         "of the hierarchical schedule (default lax — the "
+                         "right tool on the slow inter-pod/cross-host link)")
     ap.add_argument("--optimizer", default=None,
                     choices=["adamw", "sgd"],
                     help="default: family choice (momentum SGD for the "
@@ -93,13 +116,21 @@ def main(argv=None):
                     help="checkpoint period in steps (default: steps/5 "
                          "when --ckpt-dir is set)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-    if (args.bucket_mb is not None or args.wire_dtype != "fp32"
-            or args.overlap or args.comm_backend != "lax") \
-            and args.parallel != "zero1":
+    return ap
+
+
+def check_run_args(ap: argparse.ArgumentParser, args) -> None:
+    if comm_flags_set(args) and args.parallel != "zero1":
         ap.error("--bucket-mb / --wire-dtype / --overlap / --comm-backend "
-                 "configure the explicit bucketed collectives; add "
-                 "--parallel zero1")
+                 "/ --cross-backend configure the explicit bucketed "
+                 "collectives; add --parallel zero1")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    add_run_args(ap)
+    args = ap.parse_args(argv)
+    check_run_args(ap, args)
 
     run = compile_run(spec_from_args(args))
     print(f"arch: {run.cfg.name}  family={run.family.family}  "

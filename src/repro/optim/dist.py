@@ -40,16 +40,23 @@ from repro.core.collectives import flatten_pad, strip_broadcast, strip_reduce
 DEFAULT_COMM = CommConfig()
 
 
-def _owner_perm(comm: CommConfig, mesh: Mesh, axes):
-    # row j of a (G, n/G) state tensor lands on the member at flat mesh
-    # index j, but under the hierarchical schedule that member OWNS strip
-    # owner_index = d*G_out + p — so value-initialized optimizer state must
-    # be laid out in owner order (zeros-init state is insensitive to this)
-    if comm.hierarchical and len(axes) == 2:
-        g_out, g_in = mesh.shape[axes[0]], mesh.shape[axes[1]]
+def owner_perm(hierarchical: bool, axes_sizes) -> Optional[np.ndarray]:
+    """Row j of a (G, n/G) state tensor lands on the member at flat mesh
+    index j, but under the hierarchical schedule that member OWNS strip
+    owner_index = d*G_out + p — so value-initialized optimizer state must
+    be laid out in owner order (zeros-init state is insensitive to this).
+    None for the flat schedule (identity layout).  Public because
+    ``checkpoint.replan`` needs the same layout law to convert strip state
+    between world sizes."""
+    if hierarchical and len(axes_sizes) == 2:
+        g_out, g_in = axes_sizes
         return np.array(
             [d * g_out + p for p in range(g_out) for d in range(g_in)])
     return None
+
+
+def _owner_perm(comm: CommConfig, mesh: Mesh, axes):
+    return owner_perm(comm.hierarchical, [mesh.shape[a] for a in axes])
 
 
 def _make_bucketed_init(optimizer, mesh: Mesh, axes, axis_arg, G: int,
@@ -132,7 +139,8 @@ def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
 
     def _update(params, grads, opt_state, lr):
         plan = plan_buckets(params, G, comm.bucket_bytes)
-        sched = make_schedule(axis_arg, comm.hierarchical, comm.backend)
+        sched = make_schedule(axis_arg, comm.hierarchical, comm.backend,
+                              comm.cross_backend)
         flat_grads = jax.tree.leaves(grads)
         # 1) one part-reduce per BUCKET: pack gradients into the fusion
         #    buffer, reduce on the wire dtype, mean in fp32
@@ -175,7 +183,8 @@ def make_overlapped_update(optimizer, mesh: Mesh, data_axes=("data",),
     comm = DEFAULT_COMM if comm is None else comm
     axes, axis_arg, G = group_axes(mesh, data_axes)
     init_fn = _make_bucketed_init(optimizer, mesh, axes, axis_arg, G, comm)
-    sched = make_schedule(axis_arg, comm.hierarchical, comm.backend)
+    sched = make_schedule(axis_arg, comm.hierarchical, comm.backend,
+                              comm.cross_backend)
 
     def local_update(params, g_strips, opt_state, lr):
         plan = plan_buckets(params, G, comm.bucket_bytes)

@@ -19,3 +19,30 @@ def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
                          * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
         return jnp.where(step < warmup_steps, warm, cos)
     return sched
+
+
+def linear_scale_warmup(base_lr: float, scale: float, warmup_steps: int,
+                        total_steps: int, final_frac: float = 0.1):
+    """Goyal et al.'s large-batch recipe (PAPERS.md): when the global batch
+    grows by ``scale`` (the data-parallel ways), the target LR is
+    ``base_lr * scale`` — but jumping there at step 0 diverges, so the LR
+    ramps LINEARLY from ``base_lr`` to the scaled peak over
+    ``warmup_steps`` ("gradual warmup"), then follows the usual cosine
+    decay toward ``final_frac`` of the peak.
+
+    ``scale == 1`` (or ``warmup_steps == 0``) degrades to plain
+    ``warmup_cosine``-after-warmup behavior at ``base_lr`` — a serial run
+    under this schedule is the unscaled baseline the recipe is honest
+    against (see benchmarks/fig5_convergence.py)."""
+    peak = base_lr * float(scale)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        frac = jnp.clip(step / max(warmup_steps, 1), 0.0, 1.0)
+        warm = base_lr + (peak - base_lr) * frac
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched

@@ -39,6 +39,13 @@ class TrainerConfig:
     log_every: int = 10
     ckpt_every: int = 0            # 0 = disabled
     ckpt_dir: Optional[str] = None
+    ckpt_meta: Optional[dict] = None   # stored in the checkpoint manifest
+    #                                    (zero1 world layout for elastic
+    #                                    world-size replan — see
+    #                                    checkpoint.replan)
+    on_step: Optional[Callable] = None  # called with (step+1) after every
+    #                                     dispatched step — the cluster
+    #                                     launcher's heartbeat hook
 
 
 @dataclass
@@ -99,5 +106,8 @@ class Trainer:
             if (self.cfg.ckpt_every and self.cfg.ckpt_dir
                     and (step + 1) % self.cfg.ckpt_every == 0):
                 ckpt_lib.save(self.cfg.ckpt_dir, step + 1,
+                              meta=self.cfg.ckpt_meta,
                               params=params, opt_state=opt_state)
+            if self.cfg.on_step is not None:
+                self.cfg.on_step(step + 1)
         return params, opt_state, history

@@ -1,0 +1,417 @@
+"""Cluster subsystem tests: ClusterSpec env resolution, elastic failure
+detection, world-size replan of the zero1 strip state, and the real
+multi-process launcher (2 processes over ``jax.distributed`` + gloo).
+
+Process-spawning tests go through ``python -m repro.launch.cluster`` like a
+user would; the forced-device-count tests run in subprocesses so the rest
+of the suite keeps the single real CPU device (same isolation policy as
+tests/test_distributed.py)."""
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 300) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    prelude = "import repro.jaxcompat\n"
+    out = subprocess.run([sys.executable, "-c",
+                          prelude + textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def run_cluster_cli(argv, timeout: int = 420):
+    """Invoke the supervisor exactly as a user would."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.cluster"] + argv,
+        env=env, capture_output=True, text=True, timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec
+# ---------------------------------------------------------------------------
+
+def test_cluster_spec_env_round_trip():
+    from repro.cluster import ClusterSpec
+    spec = ClusterSpec(coordinator="localhost:12345", num_processes=4,
+                       process_id=2, local_devices=3)
+    assert ClusterSpec.from_env(spec.env()) == spec
+    # missing vars keep single-process defaults
+    assert ClusterSpec.from_env({}).num_processes == 1
+    assert not ClusterSpec.from_env({}).is_multiprocess
+
+
+def test_cluster_spec_validation():
+    from repro.cluster import ClusterSpec
+    with pytest.raises(ValueError):
+        ClusterSpec(num_processes=0)
+    with pytest.raises(ValueError):
+        ClusterSpec(num_processes=2, process_id=2)
+    with pytest.raises(ValueError):
+        ClusterSpec(coordinator="no-port")
+    with pytest.raises(ValueError):
+        ClusterSpec(local_devices=0)
+
+
+def test_in_worker_detection():
+    from repro.cluster.spec import ENV_PROCESS_ID, in_worker
+    assert not in_worker({})
+    assert in_worker({ENV_PROCESS_ID: "0"})
+
+
+# ---------------------------------------------------------------------------
+# elastic failure detection (no real processes: duck-typed handles)
+# ---------------------------------------------------------------------------
+
+class _FakeProc:
+    def __init__(self, returncode=None):
+        self.returncode = returncode
+
+    def poll(self):
+        return self.returncode
+
+
+def _handle(pid, returncode=None, hb=None, tmpdir="/tmp"):
+    from repro.cluster.launcher import WorkerHandle
+    hb_file = os.path.join(tmpdir, f"hb_{pid}")
+    if hb is not None:
+        with open(hb_file, "w") as f:
+            f.write(str(hb))
+    return WorkerHandle(proc=_FakeProc(returncode), process_id=pid,
+                        hb_file=hb_file, log_file=None)
+
+
+def test_failure_detects_nonzero_exit(tmp_path):
+    from repro.cluster.elastic import _failure
+    hs = [_handle(0, tmpdir=str(tmp_path)),
+          _handle(1, returncode=-9, tmpdir=str(tmp_path))]
+    fail = _failure(hs, time.monotonic(), heartbeat_timeout=60.0)
+    assert fail is not None and fail["reason"] == "exit"
+    assert fail["dead"] == [1]
+
+
+def test_failure_ignores_clean_exit_and_fresh_group(tmp_path):
+    from repro.cluster.elastic import _failure
+    hs = [_handle(0, tmpdir=str(tmp_path)),
+          _handle(1, returncode=0, tmpdir=str(tmp_path))]
+    assert _failure(hs, time.monotonic(), heartbeat_timeout=60.0) is None
+
+
+def test_failure_declares_hang_only_when_whole_group_stale(tmp_path):
+    from repro.cluster.elastic import _failure
+    # both alive, spawned long ago, no heartbeat ever written -> hang
+    hs = [_handle(0, tmpdir=str(tmp_path)),
+          _handle(1, tmpdir=str(tmp_path))]
+    old = time.monotonic() - 1000.0
+    fail = _failure(hs, old, heartbeat_timeout=60.0)
+    assert fail is not None and fail["reason"] == "heartbeat"
+    assert fail["dead"] == []
+    # one member freshly beating -> healthy (sync SGD: a real hang is
+    # always collective)
+    hs2 = [_handle(0, hb=5, tmpdir=str(tmp_path)),
+           _handle(1, tmpdir=str(tmp_path))]
+    assert _failure(hs2, old, heartbeat_timeout=60.0) is None
+
+
+# ---------------------------------------------------------------------------
+# world-size replan of the strip state
+# ---------------------------------------------------------------------------
+
+def _value_strips(payload_vals, world):
+    from repro.core.collectives import padded_size
+    from repro.optim.dist import owner_perm
+    p = padded_size(len(payload_vals), world["G"])
+    flat = np.zeros(p, np.float32)
+    flat[:len(payload_vals)] = payload_vals
+    arr = flat.reshape(world["G"], -1)
+    perm = owner_perm(world["hierarchical"], world["axes_sizes"])
+    return arr[perm] if perm is not None else arr
+
+
+def test_replan_strip_leaf_round_trips_across_worlds():
+    from repro.checkpoint.replan import replan_strip_leaf, world_meta
+    payload = np.random.default_rng(0).normal(size=10).astype(np.float32)
+    worlds = [world_meta([8], False, 4), world_meta([2, 4], True, 4),
+              world_meta([4, 2], True, 4), world_meta([4], False, 4),
+              world_meta([2, 2], True, 4), world_meta([1], False, 4)]
+    for old in worlds:
+        for new in worlds:
+            got = replan_strip_leaf(_value_strips(payload, old),
+                                    len(payload), old, new)
+            np.testing.assert_array_equal(got,
+                                          _value_strips(payload, new))
+
+
+def test_replan_strip_leaf_rejects_wrong_shape():
+    from repro.checkpoint.replan import replan_strip_leaf, world_meta
+    old, new = world_meta([4], False, 4), world_meta([2], False, 4)
+    with pytest.raises(ValueError):
+        replan_strip_leaf(np.zeros((2, 8), np.float32), 10, old, new)
+    with pytest.raises(ValueError):   # padded size inconsistent w/ payload
+        replan_strip_leaf(np.zeros((4, 9), np.float32), 10, old, new)
+
+
+def test_replan_strip_state_rejects_bucket_bytes_change():
+    from repro.checkpoint.replan import replan_strip_state, world_meta
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        replan_strip_state({}, [], None, world_meta([4], False, 4),
+                           world_meta([2], False, 8))
+
+
+def test_replan_strip_state_full_state_matches_ginvariant_run():
+    """Run the REAL bucketed update twice at G=4 (hierarchical 2x2), replan
+    the resulting momentum strips to G=2 (flat), and compare against the
+    state the same two updates produce when run at G=2 directly — the
+    G-invariance of the §3.4 update makes them equal to float tolerance."""
+    out = run_py("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+
+        from repro.checkpoint.replan import replan_strip_state, world_meta
+        from repro.comm.bucketer import CommConfig, plan_buckets
+        from repro.optim import MomentumSGD
+        from repro.optim.dist import make_distributed_update
+
+        params = {"w": jnp.linspace(-1, 1, 37, dtype=jnp.float32),
+                  "b": jnp.linspace(0, 2, 11, dtype=jnp.float32)}
+        grads = jax.tree.map(lambda p: jnp.cos(p) + 0.1, params)
+        comm = CommConfig(bucket_bytes=64, hierarchical=True)
+        opt = MomentumSGD(momentum=0.9)
+
+        def run_world(devs, axes, hier):
+            mesh = jax.make_mesh(devs, axes,
+                                 devices=jax.devices()[:int(np.prod(devs))],
+                                 axis_types=(AxisType.Auto,) * len(devs))
+            cc = CommConfig(bucket_bytes=64, hierarchical=hier)
+            init, upd = make_distributed_update(opt, mesh, data_axes=axes,
+                                                comm=cc)
+            p, s = params, init(params)
+            for _ in range(2):
+                p, s = upd(p, grads, s, 0.05)
+            return p, s
+
+        p4, s4 = run_world((2, 2), ("pod", "data"), True)
+        p2, s2 = run_world((2,), ("data",), False)
+        np.testing.assert_allclose(np.asarray(p4["w"]), np.asarray(p2["w"]),
+                                   rtol=2e-6, atol=2e-6)
+
+        old_w = world_meta([2, 2], True, 64)
+        new_w = world_meta([2], False, 64)
+        plan = plan_buckets(params, 2, 64)
+        old_leaves = [np.asarray(x) for x in jax.tree.leaves(s4)]
+        replanned = replan_strip_state(s2, old_leaves, plan, old_w, new_w)
+        for got, want in zip(jax.tree.leaves(replanned),
+                             jax.tree.leaves(s2)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-6, atol=2e-6)
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# make_host_mesh device-drop fix
+# ---------------------------------------------------------------------------
+
+def test_make_host_mesh_warns_and_keeps_all_devices():
+    out = run_py("""
+        import warnings
+        import jax
+        from repro.launch.mesh import make_host_mesh, mesh_devices
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            mesh = make_host_mesh(model_ways=4)   # 4 does not divide 6
+        assert len(w) == 1, [str(x.message) for x in w]
+        msg = str(w[0].message)
+        assert "drop 2" in msg and "model_ways=3" in msg, msg
+        assert mesh_devices(mesh) == 6, dict(mesh.shape)
+        assert dict(mesh.shape) == {"data": 2, "model": 3}, dict(mesh.shape)
+        print("OK")
+    """, devices=6)
+    assert "OK" in out
+
+
+def test_divisible_factorization():
+    from repro.launch.mesh import _divisible_factorization
+    assert _divisible_factorization(6, 4, 1) == (3, 1)
+    assert _divisible_factorization(8, 4, 2) == (4, 2)
+    assert _divisible_factorization(7, 4, 2) == (1, 7) or \
+        _divisible_factorization(7, 4, 2)[0] * \
+        _divisible_factorization(7, 4, 2)[1] in (1, 7)
+    assert _divisible_factorization(1, 1, 1) == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore onto a different world size (through compile_run)
+# ---------------------------------------------------------------------------
+
+_STAGE = """
+    import jax
+    from repro.api import MeshSpec, RunSpec, compile_run
+    # constant schedule: the LR at step k must not depend on spec.steps,
+    # or the save-at-3 run and the 6-step reference would train the first
+    # three steps under different LRs
+    spec = RunSpec(arch="vgg-a", smoke=True, parallel="zero1",
+                   mesh=MeshSpec(pods={pods}), steps={steps}, batch=8,
+                   schedule="constant",
+                   ckpt_dir={ckpt_dir!r}, ckpt_every={ckpt_every},
+                   log_every=100)
+    run = compile_run(spec)
+    hist = run.fit({fit_args})
+    run.close()
+    print("FINAL", hist[-1]["loss"] if hist else "none")
+"""
+
+
+def _final(out: str) -> float:
+    m = re.search(r"FINAL ([\d.eE+-]+)", out)
+    assert m, out
+    return float(m.group(1))
+
+
+@pytest.mark.parametrize("resume_devices,resume_pods", [(4, 1), (2, 1)])
+def test_restore_across_world_sizes(tmp_path, resume_devices, resume_pods):
+    """Save at G=8 (hierarchical pods=2 x data=4), restore at G=4 and G=2
+    (flat): the strip state is re-planned and the trajectory continues —
+    final loss matches an uninterrupted run at the RESUME world size."""
+    ckpt = str(tmp_path / "ckpt")
+    run_py(_STAGE.format(pods=2, steps=3, ckpt_dir=ckpt, ckpt_every=3,
+                         fit_args=""), devices=8)
+    resumed = _final(run_py(
+        _STAGE.format(pods=resume_pods, steps=6, ckpt_dir=ckpt,
+                      ckpt_every=0, fit_args=""),
+        devices=resume_devices))
+    ref = _final(run_py(
+        _STAGE.format(pods=resume_pods, steps=6, ckpt_dir=None,
+                      ckpt_every=0, fit_args="start_step=0"),
+        devices=resume_devices))
+    assert abs(resumed - ref) < 5e-3, (resumed, ref)
+
+
+def test_restore_without_meta_still_fails_cleanly(tmp_path):
+    """A shape-mismatched checkpoint with NO zero1 meta must raise a real
+    error, not replan garbage."""
+    out = run_py(f"""
+        import numpy as np
+        import jax
+        from repro.api import MeshSpec, RunSpec, compile_run
+        from repro.checkpoint import ckpt as ckpt_lib
+        spec = RunSpec(arch="vgg-a", smoke=True, parallel="zero1",
+                       mesh=MeshSpec(), steps=2, batch=8,
+                       ckpt_dir={str(tmp_path)!r}, log_every=100)
+        run = compile_run(spec)
+        # forge a checkpoint with wrong strip shapes and no meta
+        bad_state = jax.tree.map(
+            lambda s: np.zeros((7,) + tuple(s.shape[1:]), np.float32)
+            if getattr(s, 'ndim', 0) >= 2 else np.asarray(s),
+            run.opt_state)
+        ckpt_lib.save({str(tmp_path)!r}, 1, params=run.params,
+                      opt_state=bad_state)
+        try:
+            run.restore(1)
+        except ValueError as e:
+            assert "meta" in str(e) or "shape" in str(e), e
+            print("RAISED")
+    """, devices=2)
+    assert "RAISED" in out
+
+
+# ---------------------------------------------------------------------------
+# the real thing: multi-process jax.distributed via the launcher CLI
+# ---------------------------------------------------------------------------
+
+def test_two_process_smoke_matches_single_process():
+    """2 real processes over gloo, --verify: the launcher itself asserts
+    |cluster final loss - single-process final loss| <= tol and exits
+    nonzero on mismatch."""
+    with tempfile.TemporaryDirectory() as td:
+        out = run_cluster_cli(
+            ["--processes", "2", "--arch", "vgg-a", "--smoke",
+             "--steps", "4", "--batch", "8", "--run-dir", td, "--verify"])
+        assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-2000:]
+        assert "verify:" in out.stdout and "OK" in out.stdout, out.stdout
+        result = json.load(open(os.path.join(td, "result.json")))
+        assert result["world"] == 2 and result["final_loss"] is not None
+
+
+def test_chaos_kill_one_worker_recovers_and_matches():
+    """The chaos harness: SIGKILL worker 1 mid-run; the supervisor must
+    detect it, re-form at world=1, resume from the latest checkpoint with
+    a replanned G=2 -> G=1 state, and land on the SAME final loss as an
+    uninterrupted single-process run of the full schedule."""
+    with tempfile.TemporaryDirectory() as td:
+        ckpt = os.path.join(td, "ckpt")
+        out = run_cluster_cli(
+            ["--processes", "2", "--arch", "vgg-a", "--smoke",
+             "--steps", "16", "--batch", "8", "--schedule", "constant",
+             "--ckpt-dir", ckpt, "--run-dir", td, "--ckpt-every", "2",
+             "--chaos-kill-step", "3", "--heartbeat-timeout", "60"])
+        assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-2000:]
+        assert "attempt 1: world=1" in out.stdout, out.stdout
+        assert "resuming from checkpoint" in out.stdout, out.stdout
+        result = json.load(open(os.path.join(td, "result.json")))
+        assert result["world"] == 1
+
+        ref = _final(run_py(
+            _STAGE.format(pods=1, steps=16, ckpt_dir=None, ckpt_every=0,
+                          fit_args="start_step=0"), devices=1))
+        assert abs(result["final_loss"] - ref) < 5e-3, (result, ref)
+
+
+# ---------------------------------------------------------------------------
+# satellites: linear-scale-warmup schedule, cross-host balance regimes
+# ---------------------------------------------------------------------------
+
+def test_linear_scale_warmup_shape():
+    from repro.optim import linear_scale_warmup
+    sched = linear_scale_warmup(1e-3, 8, 10, 100)
+    assert float(sched(0)) == pytest.approx(1e-3)
+    assert float(sched(5)) == pytest.approx((1e-3 + 8e-3) / 2)
+    assert float(sched(10)) == pytest.approx(8e-3)
+    # decays after warmup, floored at final_frac * peak
+    assert float(sched(100)) == pytest.approx(0.1 * 8e-3, rel=1e-3)
+    assert float(sched(55)) < 8e-3
+
+
+def test_linear_scale_warmup_in_runspec():
+    from repro.api import SCHEDULES, RunSpec
+    assert "linear-scale-warmup" in SCHEDULES
+    RunSpec(arch="vgg-a", schedule="linear-scale-warmup")   # validates
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", schedule="nope")
+
+
+def test_cross_host_hw_regimes():
+    from repro.configs import XEON_E5_2698V3_FDR as FDR
+    from repro.core.balance import CROSS_HOST_REGIMES, cross_host_hw
+    eth = cross_host_hw(FDR, "ethernet-10gbe")
+    assert eth.link_bw == pytest.approx(10e9 / 8)
+    assert eth.sw_latency == pytest.approx(50e-6)
+    ib = cross_host_hw(FDR, "infiniband-fdr")
+    assert ib.link_bw == pytest.approx(56e9 / 8)
+    assert set(CROSS_HOST_REGIMES) == {"infiniband-fdr", "ethernet-10gbe"}
+    with pytest.raises(ValueError):
+        cross_host_hw(FDR, "carrier-pigeon")
+
+
+def test_comm_config_cross_backend_validation():
+    from repro.comm import CommConfig
+    CommConfig(cross_backend="pallas-ring")   # valid
+    with pytest.raises(ValueError, match="cross_backend"):
+        CommConfig(cross_backend="smoke-signals")
