@@ -5,7 +5,15 @@ hyperparameters, no compression, no asynchrony), the 32-node and 64-node
 training curves OVERLAP the serial curve exactly.  We verify the mechanism:
 training a reduced VGG-A with the same global batch split into 1, 2 and 4
 synchronous 'nodes' (gradient-accumulation shards, the single-host
-equivalent of data parallelism) yields identical loss trajectories."""
+equivalent of data parallelism) yields identical loss trajectories.
+
+The PARALLEL_MODES extension rides the same harness: the sync / stale-sync
+/ gossip rows train the same net under the three consistency models' exact
+node-level gradient math (full mean / one-step-old mean / rotating
+GossipGraD pair mean — mirroring ``optim.dist`` + ``comm.backends.gossip``)
+and report the final losses next to each mode's per-step wire-cost
+prediction from ``core.balance`` — the convergence-vs-wire-time trade in
+one table."""
 from __future__ import annotations
 
 import numpy as np
@@ -13,7 +21,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, smoke_variant
+from repro.configs import XEON_E5_2698V3_FDR, get_config, smoke_variant
+from repro.core import balance
 from repro.data import stream_for
 from repro.models import cnn
 from repro.optim import MomentumSGD, linear_scale_warmup
@@ -57,6 +66,109 @@ def train_curve(num_nodes: int, seed: int = 0):
         params, state = opt.update(grads, state, params, 5e-3)
         losses.append(loss_sum)
     return np.array(losses)
+
+
+def _mix_grads(mode: str, node_grads, carried, step: int):
+    """One step of each consistency model's gradient math, at node level.
+
+    ``node_grads`` is the per-node gradient-tree list; returns (tree the
+    optimizer applies, carried state for the next step).  The math mirrors
+    the device implementations exactly: sync is the full mean
+    (``optim.dist.UpdatePlan.reduce``); stale-sync applies LAST step's mean
+    and carries this step's (``make_stale_sync_update`` — step 0 applies
+    its own); gossip flattens the trees to one fusion buffer and takes, for
+    strip i, the pair mean of nodes i and (i - s) % N with the GossipGraD
+    shift s = 1 + step % (N-1) (``comm.backends.gossip`` + the strip
+    all-gather reassembly)."""
+    n = len(node_grads)
+    mean = jax.tree.map(lambda *g: sum(g) / n, *node_grads)
+    if mode == "sync":
+        return mean, None
+    if mode == "stale":
+        return (mean if carried is None else carried), mean
+    assert mode == "gossip"
+    leaves = [jax.tree.leaves(g) for g in node_grads]
+    flats, shapes = [], [leaf.shape for leaf in leaves[0]]
+    for ls in leaves:
+        v = np.concatenate([np.asarray(leaf).ravel() for leaf in ls])
+        pad = (-v.size) % n
+        if pad:
+            v = np.concatenate([v, np.zeros(pad, v.dtype)])
+        flats.append(v.reshape(n, -1))     # node's buffer as n chunks
+    s = 1 + step % (n - 1)
+    strips = [(flats[i][i] + flats[(i - s) % n][i]) / 2.0 for i in range(n)]
+    buf, out, off = np.concatenate(strips), [], 0
+    for shp in shapes:
+        size = int(np.prod(shp))
+        out.append(jnp.asarray(buf[off:off + size].reshape(shp)))
+        off += size
+    treedef = jax.tree.structure(node_grads[0])
+    return jax.tree.unflatten(treedef, out), None
+
+
+def train_curve_mode(mode: str, num_nodes: int = 4, seed: int = 0):
+    """``train_curve`` generalized over the consistency model: "sync"
+    reproduces ``train_curve(num_nodes)`` exactly; "stale" and "gossip"
+    swap in their gradient math via :func:`_mix_grads`."""
+    cfg = smoke_variant(get_config("vgg-a"))
+    params = cnn.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = MomentumSGD(momentum=0.9)
+    state = opt.init(params)
+    stream = stream_for(cfg, GLOBAL_BATCH, 0, seed=seed)
+    losses, carried = [], None
+
+    @jax.jit
+    def grad_on(params, batch):
+        return jax.value_and_grad(
+            lambda p: cnn.loss_fn(p, cfg, batch))(params)
+
+    for step in range(STEPS):
+        batch = jax.tree.map(jnp.asarray, next(stream))
+        shard = GLOBAL_BATCH // num_nodes
+        loss_sum, node_grads = 0.0, []
+        for i in range(num_nodes):
+            sub = jax.tree.map(lambda t: t[i * shard:(i + 1) * shard], batch)
+            lv, g = grad_on(params, sub)
+            loss_sum += float(lv) / num_nodes
+            node_grads.append(g)
+        grads, carried = _mix_grads(mode, node_grads, carried, step)
+        params, state = opt.update(grads, state, params, 5e-3)
+        losses.append(loss_sum)
+    return np.array(losses)
+
+
+def parallel_mode_rows(num_nodes: int = 4):
+    """The three-way consistency-model comparison: final smoke-VGG-A loss
+    per mode plus each mode's predicted per-step wire seconds on the
+    paper's FDR hardware (``core.balance``) — sync pays the full ring
+    round-trip, gossip one partner exchange + the gather, stale-sync the
+    sync bytes but hidden behind a whole step of compute."""
+    cfg = smoke_variant(get_config("vgg-a"))
+    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    total_bytes = sum(leaf.size * 4 for leaf in jax.tree.leaves(params))
+    n_tensors = len(jax.tree.leaves(params))
+    hw = XEON_E5_2698V3_FDR
+    bucket = 4 * 2 ** 20
+    t_sync = balance.bucketed_allreduce_time(total_bytes, n_tensors, bucket,
+                                             num_nodes, hw)
+    t_gossip = balance.gossip_exchange_time(total_bytes, n_tensors, bucket,
+                                            num_nodes, hw)
+    c_sync = train_curve_mode("sync", num_nodes)
+    c_stale = train_curve_mode("stale", num_nodes)
+    c_gossip = train_curve_mode("gossip", num_nodes)
+    return [
+        ("fig5/mode_final_loss_sync", float(c_sync[-1]), None),
+        ("fig5/mode_final_loss_stale", float(c_stale[-1]),
+         float(c_sync[-1])),
+        ("fig5/mode_final_loss_gossip", float(c_gossip[-1]),
+         float(c_sync[-1])),
+        ("fig5/mode_wire_s_per_step_sync", t_sync, None),
+        # stale-sync sends the sync bytes but a full step of compute hides
+        # them; report the wire time it must hide (exposure is
+        # stale_sync_exposed_time(t_sync, compute) -> 0 for these nets)
+        ("fig5/mode_wire_s_per_step_stale_hidden", t_sync, t_sync),
+        ("fig5/mode_wire_s_per_step_gossip", t_gossip, t_sync),
+    ]
 
 
 def train_curve_sched(batch: int, steps: int, lr_fn, seed: int = 0):
@@ -125,7 +237,7 @@ def rows():
             float(np.max(np.abs(c1 - c2))), 0.0),
            ("fig5/max_curve_divergence_4node",
             float(np.max(np.abs(c1 - c4))), 0.0)]
-    return out + linear_scaling_rows()
+    return out + linear_scaling_rows() + parallel_mode_rows()
 
 
 def main():

@@ -85,9 +85,48 @@ def rows():
     return out
 
 
-def main():
-    for name, us, derived in rows():
+def report(all_rows):
+    """The persisted JSON shape (BENCH_comm.json family): per-row
+    interpret-mode us + derived blocking/validation string, with the
+    oracle pass bits aggregated into the regression gate.  Interpret-mode
+    wall time is NOT TPU-indicative, so the gate is correctness-only —
+    ``all_ok`` goes false the moment any kernel drifts from its oracle."""
+    per_kernel = {name: {"us": round(us, 1), "derived": derived}
+                  for name, us, derived in all_rows}
+    return {
+        "benchmark": "kernels_micro",
+        "rows": per_kernel,
+        "gates": {
+            "n_kernels": len(all_rows),
+            "all_ok": all("ok=True" in derived
+                          for _, _, derived in all_rows),
+        },
+    }
+
+
+def main(argv=None):
+    import argparse
+    import json
+    import os.path
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="persist the per-kernel report + oracle gate as "
+                         "JSON (CI: benchmarks/BENCH_kernels.json)")
+    args = ap.parse_args(argv)
+    all_rows = rows()
+    for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        rep = report(all_rows)
+        out = args.out if os.path.isabs(args.out) else os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), args.out)
+        with open(out, "w") as f:
+            json.dump(rep, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {out}  (kernels={rep['gates']['n_kernels']}, "
+              f"all_ok={rep['gates']['all_ok']})")
+    return all_rows
 
 
 if __name__ == "__main__":

@@ -10,8 +10,9 @@ data handling, compute and synchronous communication behind one interface):
 ``RunSpec`` declares the run (arch, mesh topology, parallelism mode, comm
 knobs, optimizer, trainer settings); ``compile_run`` resolves the model
 family through the adapter registry, builds the mesh, places params, picks
-the update path (serial / dp / explicit-bucketed zero1 / GSPMD zero1) and
-returns a ready :class:`Run`.  New model families plug in with
+the update path (serial / dp / explicit-bucketed zero1 / GSPMD zero1 /
+stale-sync / gossip — what each mode accepts is the declarative
+``MODE_CAPS`` table) and returns a ready :class:`Run`.  New model families plug in with
 ``register_family``; the stable low-level layer (``make_train_step``,
 ``make_distributed_update``) is unchanged underneath.
 
@@ -31,12 +32,14 @@ from repro.api.run import Run  # noqa: F401
 from repro.api.serve import Request, Server  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     MIB,
+    MODE_CAPS,
     OPTIMIZERS,
     PAGED_ATTN_IMPLS,
     PARALLEL_MODES,
     SCHEDULER_POLICIES,
     SCHEDULES,
     MeshSpec,
+    ModeCaps,
     RunSpec,
     ServeSpec,
 )

@@ -10,11 +10,15 @@ Resolution order:
 3. mesh from the ``MeshSpec`` topology (none for ``serial``), params
    initialized and placed by the logical-axis sharding rules;
 4. parallelism mode -> update path: plain ``optimizer.update`` (serial/dp),
-   the explicit bucketed §3.4 strip update of ``repro.comm`` (``zero1`` —
-   monolithic post-grad reduction, or the §3.1 backprop-overlapped bubble
-   schedule when ``CommConfig.overlap`` is set; either way the schedules
-   drive the collective backend named by ``CommConfig.backend`` — lax or
-   the explicit Pallas ring), or GSPMD-sharded optimizer state
+   the explicit bucketed §3.4 phase pipeline of ``repro.comm`` +
+   ``optim.dist.UpdatePlan`` (``zero1`` — monolithic reduce/apply/broadcast,
+   or the §3.1 backprop-overlapped bubble schedule when
+   ``CommConfig.overlap`` is set; ``stale-sync`` — the same pipeline with
+   the reduce consumed one step late; ``gossip`` — the same pipeline with
+   the reduce phase on the GossipGraD partner-exchange backend, flat
+   schedule by default so the rotation spans the whole group; in every
+   case the schedules drive the collective backend named by
+   ``CommConfig.backend``), or GSPMD-sharded optimizer state
    (``zero1-gspmd``);
 5. ``make_train_step`` (or ``make_overlapped_train_step``) glues loss ->
    grads -> update into the jit-ready step the returned
@@ -40,7 +44,11 @@ from repro.core.params import Spec
 from repro.core.sharding import ShardingCtx, ShardingRules
 from repro.launch.mesh import make_cluster_mesh, make_host_mesh
 from repro.optim import AdamW, MomentumSGD, constant, linear_scale_warmup, warmup_cosine
-from repro.optim.dist import make_distributed_update, make_overlapped_update
+from repro.optim.dist import (
+    make_distributed_update,
+    make_overlapped_update,
+    make_stale_sync_update,
+)
 from repro.train import make_overlapped_train_step, make_train_step, zero1_state_shardings
 
 
@@ -118,11 +126,22 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
     dist_update = None
     train_step = None
     comm = None
-    if spec.parallel == "zero1":
+    if spec.parallel in ("zero1", "stale-sync", "gossip"):
         axes = _data_axes(mesh)
-        comm = spec.comm if spec.comm is not None \
-            else CommConfig(hierarchical=len(axes) == 2)
-        if comm.overlap:
+        if spec.comm is not None:
+            comm = spec.comm
+        elif spec.parallel == "gossip":
+            # flat on purpose: hierarchical would scope the partner
+            # rotation to each pod (and the in-pod group of a 1-pod-per-
+            # host cluster is a single member — full sync, no gossip)
+            comm = CommConfig(backend="gossip", hierarchical=False)
+        else:
+            comm = CommConfig(hierarchical=len(axes) == 2)
+        if spec.parallel == "stale-sync":
+            init_fn, dist_update = make_stale_sync_update(
+                optimizer, mesh, data_axes=axes, comm=comm)
+            opt_state = init_fn(params)
+        elif comm.overlap:
             # §3.1 bubble schedule: the whole step runs in one shard_map and
             # each bucket's part-reduce is issued inside the backward pass
             # (comm hooks), so the loss must be the mesh-free local loss —

@@ -15,6 +15,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.checkpoint import ckpt as ckpt_lib
@@ -39,8 +40,9 @@ class Run:
     train_step: Callable            # (params, opt_state, step, batch) -> ...
     params: Any
     opt_state: Any
-    comm: Optional[Any] = None      # the RESOLVED CommConfig of a zero1 run
-    #                                 (None for other modes) — needed to
+    comm: Optional[Any] = None      # the RESOLVED CommConfig of an explicit
+    #                                 bucketed run (zero1/stale-sync/gossip;
+    #                                 None for other modes) — needed to
     #                                 re-plan strip state across world sizes
     _data: Optional[Prefetcher] = field(default=None, repr=False)
     _jit_step: Optional[Callable] = field(default=None, repr=False)
@@ -110,14 +112,17 @@ class Run:
         world = self._zero1_world()
         return {"zero1": world} if world is not None else None
 
-    def _restore_replan(self, step: int):
+    def _restore_replan(self, step: int, template=None):
         """Strict restore failed on shape: the checkpoint was saved at a
         different world size.  Re-plan the strip opt_state for THIS world
         (see ``checkpoint.replan`` for why this is exact); params are
         replicated, so their shapes never depend on G and restore
-        strictly."""
+        strictly.  ``template`` is the opt_state tree to restore into —
+        defaults to the run's own; the stale-sync interop path passes the
+        INNER zero1 template when the checkpoint has the bare layout."""
         from repro.checkpoint.replan import replan_strip_state
         from repro.comm.bucketer import plan_buckets
+        template = self.opt_state if template is None else template
         new_world = self._zero1_world()
         old_world = ckpt_lib.read_manifest(
             self.spec.ckpt_dir, step)["meta"].get("zero1")
@@ -128,12 +133,28 @@ class Run:
         trees, _ = ckpt_lib.restore(self.spec.ckpt_dir, step,
                                     params=self.params)
         old_leaves = ckpt_lib.restore_loose(self.spec.ckpt_dir, step,
-                                            "opt_state", self.opt_state)
+                                            "opt_state", template)
         plan = plan_buckets(self.params, new_world["G"],
                             self.comm.bucket_bytes)
         trees["opt_state"] = replan_strip_state(
-            self.opt_state, old_leaves, plan, old_world, new_world)
+            template, old_leaves, plan, old_world, new_world)
         return trees
+
+    def _stale_wrapped(self) -> bool:
+        """True when this run's opt_state is the stale-sync wrapper dict
+        around the inner zero1 strip state."""
+        return (isinstance(self.opt_state, dict)
+                and set(self.opt_state) == {"stale", "synced", "zero1"})
+
+    def _reinit_stale(self, inner):
+        """Wrap a restored INNER zero1 strip state for a stale-sync run:
+        fresh zero staleness buffer, ``synced=0`` so the first resumed step
+        applies its own reduce instead of garbage (see
+        ``optim.dist.make_stale_sync_update``)."""
+        return {"stale": tuple(jnp.zeros_like(s)
+                               for s in self.opt_state["stale"]),
+                "synced": jnp.zeros((), jnp.int32),
+                "zero1": inner}
 
     def restore(self, step: int):
         """Load checkpoint ``step`` from ``spec.ckpt_dir`` and place the
@@ -141,13 +162,24 @@ class Run:
         opt_state lands on its data-axis strips, not unplaced on device 0).
         A zero1 checkpoint saved at a DIFFERENT world size is re-planned
         (``checkpoint.replan``) instead of rejected — the elastic
-        shrink-and-resume path."""
+        shrink-and-resume path.  A stale-sync run additionally accepts a
+        BARE zero1 checkpoint (the strip layouts are identical by
+        construction): the inner state restores and the staleness buffer
+        re-initializes, costing one synchronous step on resume."""
+        opt_tpl, wrap = self.opt_state, None
+        if self._stale_wrapped():
+            keys = ckpt_lib.read_manifest(
+                self.spec.ckpt_dir, step)["trees"].get("opt_state", ())
+            if not any(k.startswith("opt_state:zero1/") for k in keys):
+                opt_tpl, wrap = self.opt_state["zero1"], self._reinit_stale
         try:
             trees, _ = ckpt_lib.restore(self.spec.ckpt_dir, step,
                                         params=self.params,
-                                        opt_state=self.opt_state)
+                                        opt_state=opt_tpl)
         except ValueError:
-            trees = self._restore_replan(step)
+            trees = self._restore_replan(step, template=opt_tpl)
+        if wrap is not None:
+            trees["opt_state"] = wrap(trees["opt_state"])
         placed = jax.tree.map(
             lambda cur, new: jax.device_put(new, cur.sharding),
             {"params": self.params, "opt_state": self.opt_state}, trees)

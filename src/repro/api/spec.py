@@ -28,6 +28,23 @@ Parallelism modes (the paper's §3/§4 composition points):
     Same strip scheme through the compiler instead: optimizer state is
     sharded over the data axes (``zero1_state_shardings``) and XLA
     factorizes the all-reduce into reduce-scatter + all-gather.
+``stale-sync``
+    Bounded staleness over the same strip update: step t applies the
+    mean-gradient strips reduced at step t-1 from a carried buffer
+    (``make_stale_sync_update``), so a full step of compute is available
+    to hide the reduce.  Same layout and ``comm`` knobs as ``zero1``
+    except ``overlap`` (the staleness carry IS the overlap mechanism).
+``gossip``
+    GossipGraD partner exchange: the same pipeline with the reduce
+    phase's collectives on the ``gossip`` backend — one rotating
+    chunk-sized ``lax.ppermute`` partner message per step instead of the
+    full ring reduction (``repro.comm.backends.gossip``).  Params stay
+    replicated (the strip all-gather is unchanged); only the gradient
+    estimator weakens to a rotating pair mean.
+
+What each mode accepts (``comm`` / ``overlap`` / which backends) lives in
+the declarative :data:`MODE_CAPS` table — validation reads it, so a new
+mode registers capabilities instead of growing an ``if`` chain.
 """
 from __future__ import annotations
 
@@ -36,7 +53,33 @@ from typing import Any, Optional, Tuple, Union
 
 from repro.comm.bucketer import CommConfig
 
-PARALLEL_MODES = ("serial", "dp", "zero1", "zero1-gspmd")
+
+@dataclass(frozen=True)
+class ModeCaps:
+    """What one parallel mode supports, declaratively: does it take the
+    explicit-path ``comm`` knobs at all, does it run the §3.1 overlapped
+    train step, and WHICH collective backends its reduce phase accepts
+    (``None`` = comm is rejected outright, so backends are moot).
+    ``default_backend`` overrides the ``CommConfig`` default for modes
+    whose semantics live in a specific backend (gossip)."""
+    comm: bool = False
+    overlap: bool = False
+    backends: Optional[Tuple[str, ...]] = None
+    default_backend: Optional[str] = None
+
+
+MODE_CAPS = {
+    "serial": ModeCaps(),
+    "dp": ModeCaps(),
+    "zero1": ModeCaps(comm=True, overlap=True,
+                      backends=("lax", "pallas-ring")),
+    "zero1-gspmd": ModeCaps(),
+    "stale-sync": ModeCaps(comm=True, backends=("lax", "pallas-ring")),
+    "gossip": ModeCaps(comm=True, backends=("gossip",),
+                       default_backend="gossip"),
+}
+
+PARALLEL_MODES = tuple(MODE_CAPS)
 OPTIMIZERS = ("adamw", "sgd")
 SCHEDULES = ("warmup_cosine", "constant", "linear-scale-warmup")
 
@@ -86,8 +129,10 @@ class RunSpec:
     smoke:      reduce the config to the family's CPU-sized smoke variant.
     parallel:   one of ``PARALLEL_MODES`` (see module docstring).
     mesh:       topology for the non-serial modes (ignored for ``serial``).
-    comm:       communication knobs for ``zero1``; ``None`` picks a default
-                ``CommConfig`` (hierarchical iff the mesh has a pod axis).
+    comm:       communication knobs for the explicit bucketed modes
+                (``MODE_CAPS[mode].comm``); ``None`` picks the mode's
+                default ``CommConfig`` (hierarchical iff the mesh has a
+                pod axis; flat + gossip backend for ``parallel="gossip"``).
     optimizer:  ``"adamw"`` / ``"sgd"``; ``None`` = family default (momentum
                 SGD for the paper's CNN/DNN workloads, AdamW otherwise).
     """
@@ -125,11 +170,33 @@ class RunSpec:
                              f"got {self.schedule!r}")
         if self.steps < 1:
             raise ValueError(f"steps must be >= 1, got {self.steps}")
-        if self.comm is not None and self.parallel != "zero1":
-            raise ValueError(
-                "comm (bucket size / wire dtype / hierarchical) only applies "
-                "to the explicit bucketed path — set parallel='zero1' "
-                f"(got parallel={self.parallel!r})")
+        caps = MODE_CAPS[self.parallel]
+        if self.comm is not None:
+            if not caps.comm:
+                commful = tuple(m for m, c in MODE_CAPS.items() if c.comm)
+                raise ValueError(
+                    "comm (bucket size / wire dtype / hierarchical) only "
+                    "applies to the explicit bucketed modes "
+                    f"{commful} — parallel={self.parallel!r} does not take "
+                    "it")
+            if self.comm.overlap and not caps.overlap:
+                overlappy = tuple(m for m, c in MODE_CAPS.items()
+                                  if c.overlap)
+                raise ValueError(
+                    "comm.overlap (the §3.1 backward-pass reduce schedule) "
+                    f"is only supported by {overlappy} — "
+                    f"parallel={self.parallel!r} does not run the "
+                    "overlapped train step")
+            backend = self.comm.backend
+            name = backend if isinstance(backend, str) else getattr(
+                backend, "name", type(backend).__name__)
+            if caps.backends is not None and name not in caps.backends:
+                raise ValueError(
+                    f"collective backend {name!r} is not valid under "
+                    f"parallel={self.parallel!r}; this mode supports "
+                    f"{caps.backends}. The gossip backend changes the "
+                    "consistency model, so it is selected by "
+                    "parallel='gossip', not as a zero1 backend swap")
 
     def replace(self, **kw) -> "RunSpec":
         return replace(self, **kw)

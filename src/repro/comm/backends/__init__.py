@@ -46,18 +46,29 @@ Backends:
     The paper's §3.4 ring explicitly: ``lax.ppermute`` neighbor exchange
     with the per-hop combine in a Pallas kernel (``kernels/ring.py``, whose
     stacked form is oracle-validated in interpret mode).
+``gossip`` (:class:`GossipBackend`)
+    GossipGraD partner exchange: one chunk-sized ``lax.ppermute`` message
+    per step under the rotating pairing ``partner = (rank + step + 1) %
+    world_size`` instead of the full ring reduction.  NOT a drop-in ring
+    replacement — ``part_reduce`` delivers the rotating PAIR mean, a
+    deliberate consistency-model change selected by ``parallel="gossip"``
+    (``api.spec.MODE_CAPS`` rejects it under the synchronous modes).  Its
+    partner rotation is step-scheduled: bind the train step with
+    ``bind_step`` / ``schedule.bind_step``.
 """
 from __future__ import annotations
 
 from typing import Union
 
 from repro.comm.backends.base import CollectiveBackend  # noqa: F401
+from repro.comm.backends.gossip import GossipBackend
 from repro.comm.backends.lax_backend import LaxBackend
 from repro.comm.backends.pallas_ring import PallasRingBackend
 
-COLLECTIVE_BACKENDS = ("lax", "pallas-ring")
+COLLECTIVE_BACKENDS = ("lax", "pallas-ring", "gossip")
 
-_FACTORIES = {"lax": LaxBackend, "pallas-ring": PallasRingBackend}
+_FACTORIES = {"lax": LaxBackend, "pallas-ring": PallasRingBackend,
+              "gossip": GossipBackend}
 
 
 def get_backend(backend: Union[str, CollectiveBackend]) -> CollectiveBackend:

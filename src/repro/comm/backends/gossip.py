@@ -1,0 +1,137 @@
+"""GossipGraD-style partner exchange as a :class:`CollectiveBackend`.
+
+The synchronous ring fully reduces every bucket each step: 2*(G-1)
+messages, every member sees every other member's gradient.  GossipGraD
+(Daily et al.; see SNIPPETS.md §3) replaces the full reduction with ONE
+partner exchange per step under a rotating pairing,
+
+    partner(rank, step) = (rank + step + 1) % world_size
+
+so each member mixes gradients with a single peer per step and the
+rotation walks the whole group every G-1 steps — the mixing matrix of any
+one step is doubly stochastic (each row averages two members; each member
+sends to exactly one peer), and the rotation makes the product of G-1
+consecutive matrices fully dense, which is what the gossip convergence
+analyses lean on.
+
+Composed with the ZeRO-1 strip update the consistency story is clean:
+``part_reduce`` hands strip owner i the PAIR mean (members i and
+i - shift) instead of the group mean, the strip optimizer runs on it, and
+``part_broadcast`` all-gathers the updated strips exactly as in the
+synchronous schedule — so params (and optimizer strips) stay bit-identical
+across members every step.  What changes is only the gradient estimator:
+each strip's update uses a rotating 2-member subset mean — unbiased, with
+higher variance that the rotation mixes away over steps.  Checkpoint
+layout is therefore identical to zero1's (the interop tests pin this).
+
+Wire cost per bucket: the exchange is ONE chunk-sized message per member
+(each member sends the chunk its downstream partner owns), i.e.
+``SWlat + (n/G)/BW`` on the reduce side versus the ring's
+``(G-1)*(SWlat + (n/G)/BW)`` — the latency win GossipGraD exists for.  The
+strip all-gather is unchanged (params must stay replicated).
+``core.balance.gossip_exchange_time`` is the model.
+
+Scaling convention: the schedules divide reduce output by G for the
+synchronous mean, so ``part_reduce`` returns the pair SUM scaled by G/2 —
+the caller's /G then yields the pair mean.  This composes unchanged
+through ``HierarchicalSchedule`` (in-pod pair sum * G_in/2, cross-pod sum
+over G_out pods, /G total = mean of the 2*G_out mixed members).
+
+The partner shift depends on the STEP, which is a traced scalar inside the
+train step while ``lax.ppermute`` needs a static permutation — so the
+exchange branches over the G-1 possible shifts with ``lax.switch``
+(shift = 1 + step % (G-1); G == 1 degenerates to the identity).  Bind the
+step with :meth:`GossipBackend.bind_step` (``comm.schedule.bind_step``
+does it for every step-scheduled backend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import (
+    AxisNames,
+    axis_size,
+    flat_group_index,
+    flatten_pad,
+    part_broadcast,
+    unflatten,
+)
+
+
+def _shift_perm(G: int, s: int) -> List[Tuple[int, int]]:
+    """Member i sends to (i + s) % G — so i RECEIVES from (i - s) % G."""
+    return [(i, (i + s) % G) for i in range(G)]
+
+
+@dataclass(frozen=True)
+class GossipBackend:
+    """``step`` selects the partner rotation; 0 (the default) pairs each
+    member with its +1 neighbor.  ``bind_step`` rebinds per train step —
+    a traced scalar is fine (the shift dispatch is a ``lax.switch``)."""
+    name: str = "gossip"
+    step: Any = 0
+
+    def bind_step(self, step) -> "GossipBackend":
+        return dataclasses.replace(self, step=step)
+
+    def _check(self, x: jax.Array, dim: int) -> None:
+        if dim != 0 or x.ndim != 1:
+            raise NotImplementedError(
+                "GossipBackend implements the schedules' canonical 1-D "
+                f"fusion-buffer form (dim=0); got dim={dim}, "
+                f"shape={x.shape}. Flatten first (see collectives."
+                "flatten_pad) or use LaxBackend.")
+
+    def _pair_chunk(self, chunks: jax.Array, axis_name: AxisNames,
+                    G: int) -> jax.Array:
+        """This member's chunk of (own + partner's) buffer: each member
+        sends the one chunk its send-partner owns, receives the chunk IT
+        owns from its receive-partner — chunk-sized messages only."""
+        p = flat_group_index(axis_name)
+
+        def shift_branch(s):
+            def branch(ch):
+                send = ch[jnp.mod(p + s, G)]
+                return lax.ppermute(send, axis_name,
+                                    perm=_shift_perm(G, s))
+            return branch
+
+        idx = jnp.mod(jnp.asarray(self.step, jnp.int32), G - 1)
+        recv = lax.switch(idx, [shift_branch(s) for s in range(1, G)],
+                          chunks)
+        return chunks[p] + recv
+
+    def part_reduce(self, x: jax.Array, axis_name: AxisNames,
+                    dim: int = 0) -> jax.Array:
+        self._check(x, dim)
+        G = axis_size(axis_name)
+        if G == 1:
+            return x
+        if x.size % G:
+            raise ValueError(
+                f"buffer size {x.size} not a strip multiple of group {G}")
+        chunks = x.reshape(G, x.size // G)
+        # pair sum scaled so the schedule-level /G yields the pair MEAN
+        return self._pair_chunk(chunks, axis_name, G) * (G / 2.0)
+
+    def part_broadcast(self, x: jax.Array, axis_name: AxisNames,
+                       dim: int = 0) -> jax.Array:
+        # updated strips all-gather exactly as in the synchronous schedule:
+        # params stay replicated, only the gradient mixing is partial
+        return part_broadcast(x, axis_name, dim)
+
+    def psum(self, x: jax.Array, axis_name: AxisNames) -> jax.Array:
+        """The gossip 'all-reduce': part_broadcast(part_reduce(x)) — every
+        member ends with the same strip-wise pair-mixed sum."""
+        G = axis_size(axis_name)
+        if G == 1:
+            return x
+        flat = flatten_pad(x, G)
+        strips = self.part_reduce(flat, axis_name)
+        return unflatten(self.part_broadcast(strips, axis_name), x.shape)

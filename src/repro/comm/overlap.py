@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.bucketer import Bucket, BucketPlan, CommConfig, plan_buckets
-from repro.comm.schedule import Schedule, make_schedule
+from repro.comm.schedule import Schedule, make_schedule, reduce_mean
 from repro.core.collectives import AxisNames
 
 
@@ -103,7 +103,7 @@ def _bucket_tap(bucket: Bucket, sched: Schedule, wire_dtype, G: int):
         if pad:
             parts.append(jnp.zeros((pad,), parts[0].dtype))
         buf = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-        strip = sched.reduce(buf, wire_dtype) / G
+        strip = reduce_mean(sched, buf, wire_dtype, G)
         # leaf cotangents pass through untouched — upstream backprop is
         # unaffected; the strip rides the sink's gradient channel
         return tuple(ct), strip

@@ -113,11 +113,30 @@ class HierarchicalSchedule:
 Schedule = Union[FlatSchedule, HierarchicalSchedule]
 
 
+def bind_step(backend: CollectiveBackend, step) -> CollectiveBackend:
+    """Bind the train-step index into a STEP-SCHEDULED backend (the gossip
+    partner rotation).  Step-free backends (lax, pallas-ring) have no
+    ``bind_step`` method and pass through untouched, so the update
+    builders can bind unconditionally — ``step`` may be a traced scalar."""
+    binder = getattr(backend, "bind_step", None)
+    return backend if binder is None else binder(step)
+
+
+def reduce_mean(sched: Schedule, buf: jax.Array, wire_dtype,
+                G: int) -> jax.Array:
+    """THE reduce phase for one fusion buffer: wire-dtype part-reduce
+    through the schedule, mean in fp32.  The single definition shared by
+    the monolithic pipeline (``optim.dist.UpdatePlan.reduce``) and the
+    §3.1 backward-pass hooks (``comm.overlap``) — the two issue points can
+    never disagree on the math."""
+    return sched.reduce(buf, wire_dtype) / G
+
+
 def make_schedule(axes: Union[str, Tuple[str, ...]],
                   hierarchical: bool = False,
                   backend: Union[str, CollectiveBackend] = "lax",
                   cross_backend: Union[str, CollectiveBackend, None] = None,
-                  ) -> Schedule:
+                  step=None) -> Schedule:
     """Pick the schedule for ``axes`` and bind its backend(s).
 
     The hierarchical form needs exactly two axes ``(outer, inner)``; one
@@ -130,7 +149,15 @@ def make_schedule(axes: Union[str, Tuple[str, ...]],
     defaults to ``"lax"``: the hop crosses the slow inter-pod link where
     XLA's collective is the right tool (and an in-kernel ring buys
     nothing), which is the mixed pairing the backends package documents.
+
+    ``step`` (may be traced) is bound into step-scheduled backends via
+    :func:`bind_step` — the gossip partner rotation advances with it;
+    step-free backends ignore it.
     """
+    def resolve(b):
+        b = get_backend(b)
+        return b if step is None else bind_step(b, step)
+
     if hierarchical and not isinstance(axes, str) and len(axes) > 2:
         raise ValueError(
             "hierarchical schedule composes exactly two axes "
@@ -140,7 +167,7 @@ def make_schedule(axes: Union[str, Tuple[str, ...]],
     if hierarchical and not isinstance(axes, str) and len(axes) == 2:
         return HierarchicalSchedule(
             outer=axes[0], inner=axes[1],
-            inner_backend=get_backend(backend),
-            outer_backend=get_backend(
+            inner_backend=resolve(backend),
+            outer_backend=resolve(
                 "lax" if cross_backend is None else cross_backend))
-    return FlatSchedule(axes=axes, backend=get_backend(backend))
+    return FlatSchedule(axes=axes, backend=resolve(backend))

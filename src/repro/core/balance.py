@@ -300,6 +300,11 @@ class RingBackendModel:
 RING_BACKEND_MODELS = {
     "lax": RingBackendModel(latency_scale=1.0, bw_efficiency=1.0),
     "pallas-ring": RingBackendModel(latency_scale=0.5, bw_efficiency=0.95),
+    # the gossip exchange is plain lax.ppermute under the hood — stock XLA
+    # message constants; its win is the MESSAGE COUNT (one partner message
+    # vs the ring's G-1 hops, see gossip_exchange_time), not the per-message
+    # cost
+    "gossip": RingBackendModel(latency_scale=1.0, bw_efficiency=1.0),
 }
 
 
@@ -443,6 +448,52 @@ def hierarchical_allreduce_time(total_bytes: float, n_tensors: int,
                                     fill_bytes=fill_bytes / max(g_in, 1),
                                     backend=cross_backend)
     return t_in + t_out
+
+
+# ---------------------------------------------------------------------------
+# Relaxed-consistency modes (PARALLEL_MODES stale-sync / gossip): what each
+# buys per step relative to the synchronous §3.2 ring round-trip above
+# ---------------------------------------------------------------------------
+def gossip_exchange_time(total_bytes: float, n_tensors: int,
+                         bucket_bytes: float, G: int,
+                         hw: HardwareConfig,
+                         n_coll: int = 0,
+                         backend: str = "gossip") -> float:
+    """Per-step wire time of the GossipGraD partner exchange
+    (``comm.backends.gossip``) plus the unchanged strip all-gather:
+
+        n_coll * SWlat + (total/G) / BW              (exchange: ONE
+                                                      chunk-sized partner
+                                                      message per bucket)
+      + n_coll * (G-1) * SWlat
+      + (G-1)/G * total / BW                         (all-gather: params
+                                                      must stay replicated)
+
+    versus the synchronous ring's ``2*(G-1)`` messages per bucket
+    (``bucketed_allreduce_time``) — the reduce side drops from G-1
+    messages to one, which is the latency-bound-regime win the mode
+    exists for.  Same knob conventions as the ring forms (``n_coll``
+    overrides the closed-form collective count with the real planner's).
+    """
+    if G <= 1:
+        return 0.0
+    hw = backend_hw(hw, backend)
+    if n_coll <= 0:
+        n_coll = collective_count(total_bytes, n_tensors, bucket_bytes)
+    exchange = n_coll * hw.sw_latency + (total_bytes / G) / hw.link_bw
+    gather = (n_coll * (G - 1) * hw.sw_latency
+              + ((G - 1) / G) * total_bytes / hw.link_bw)
+    return exchange + gather
+
+
+def stale_sync_exposed_time(comm_time: float, compute_time: float) -> float:
+    """Exposed comm under bounded staleness (PARALLEL_MODES "stale-sync"):
+    step t consumes the reduce issued at t-1, so a FULL step of compute is
+    available to hide it — exposure is only the overflow.  The limit of the
+    §3.1 bubble schedule when the overlap window grows from the remaining
+    backprop to the whole step; the price is a one-step-old gradient, not
+    wire time."""
+    return max(0.0, comm_time - compute_time)
 
 
 # ---------------------------------------------------------------------------

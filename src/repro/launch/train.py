@@ -13,6 +13,11 @@ mesh, placement, update-path selection), and ``Run.fit`` trains.
     python -m repro.launch.train --arch vgg-a --smoke \\
         --parallel zero1 --comm-backend pallas-ring
 
+    # the relaxed-consistency modes on the same pipeline: bounded
+    # staleness (apply last step's reduce) / GossipGraD partner exchange
+    python -m repro.launch.train --arch vgg-a --smoke --parallel stale-sync
+    python -m repro.launch.train --arch vgg-a --smoke --parallel gossip
+
 A ``--ckpt-dir`` run periodically checkpoints AND auto-resumes: relaunching
 the same command picks up from the latest saved step (params, optimizer
 strips and data-stream position), not from step 0.
@@ -24,7 +29,15 @@ from __future__ import annotations
 
 import argparse
 
-from repro.api import MIB, PARALLEL_MODES, SCHEDULES, MeshSpec, RunSpec, compile_run
+from repro.api import (
+    MIB,
+    MODE_CAPS,
+    PARALLEL_MODES,
+    SCHEDULES,
+    MeshSpec,
+    RunSpec,
+    compile_run,
+)
 from repro.comm import COLLECTIVE_BACKENDS, CommConfig
 from repro.configs import ALL_ARCHS
 
@@ -33,7 +46,8 @@ WIRE_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
 
 def comm_flags_set(args) -> bool:
     """True when any explicit-bucketed-collectives flag departs from its
-    default (these require --parallel zero1)."""
+    default (these require a comm-capable --parallel mode — see
+    ``MODE_CAPS``)."""
     return (args.bucket_mb is not None or args.wire_dtype != "fp32"
             or args.overlap or args.comm_backend != "lax"
             or args.cross_backend is not None)
@@ -42,12 +56,22 @@ def comm_flags_set(args) -> bool:
 def spec_from_args(args, cluster: bool = False) -> RunSpec:
     comm = None
     if comm_flags_set(args):
+        caps = MODE_CAPS[args.parallel]
         bucket_mb = 4.0 if args.bucket_mb is None else args.bucket_mb
+        # the argparse default "lax" means "the mode's default backend" —
+        # gossip's semantics live in its backend, so the name maps there
+        backend = args.comm_backend
+        if backend == "lax" and caps.default_backend is not None:
+            backend = caps.default_backend
+        # gossip stays flat even multi-pod: a hierarchical schedule would
+        # scope the partner rotation to each pod (see api.assemble)
+        hierarchical = ((args.pods > 1 or cluster)
+                        and args.parallel != "gossip")
         comm = CommConfig(bucket_bytes=int(bucket_mb * MIB),
                           reduce_dtype=WIRE_DTYPES[args.wire_dtype],
-                          hierarchical=args.pods > 1 or cluster,
+                          hierarchical=hierarchical,
                           overlap=args.overlap,
-                          backend=args.comm_backend,
+                          backend=backend,
                           cross_backend=args.cross_backend or "lax")
     ckpt_every = 0
     if args.ckpt_dir:
@@ -82,7 +106,9 @@ def add_run_args(ap: argparse.ArgumentParser, parallel_default: str = "dp"):
     ap.add_argument("--parallel", default=parallel_default,
                     choices=list(PARALLEL_MODES),
                     help="serial | dp (pjit/GSPMD) | zero1 (explicit "
-                         "bucketed §3.4 strips) | zero1-gspmd")
+                         "bucketed §3.4 strips) | zero1-gspmd | stale-sync "
+                         "(bounded staleness: apply last step's reduce) | "
+                         "gossip (GossipGraD rotating partner exchange)")
     ap.add_argument("--pods", type=int, default=1,
                     help="pod axis extent (>1 adds the cross-pod "
                          "hierarchical hop)")
@@ -120,10 +146,26 @@ def add_run_args(ap: argparse.ArgumentParser, parallel_default: str = "dp"):
 
 
 def check_run_args(ap: argparse.ArgumentParser, args) -> None:
-    if comm_flags_set(args) and args.parallel != "zero1":
+    """Flag compatibility, read off the declarative ``MODE_CAPS`` table —
+    the same source ``RunSpec`` validates against, so the launcher and the
+    API can never disagree on what a mode supports."""
+    caps = MODE_CAPS[args.parallel]
+    if comm_flags_set(args) and not caps.comm:
+        commful = [m for m, c in MODE_CAPS.items() if c.comm]
         ap.error("--bucket-mb / --wire-dtype / --overlap / --comm-backend "
                  "/ --cross-backend configure the explicit bucketed "
-                 "collectives; add --parallel zero1")
+                 f"collectives, which --parallel {args.parallel} does not "
+                 f"use; pick one of {commful}")
+    if args.overlap and not caps.overlap:
+        overlappy = [m for m, c in MODE_CAPS.items() if c.overlap]
+        ap.error("--overlap (the §3.1 backward-pass reduce schedule) is "
+                 f"only supported by {overlappy}, not --parallel "
+                 f"{args.parallel}")
+    if (caps.backends is not None and args.comm_backend != "lax"
+            and args.comm_backend not in caps.backends):
+        ap.error(f"--comm-backend {args.comm_backend} is not valid under "
+                 f"--parallel {args.parallel}; this mode supports "
+                 f"{list(caps.backends)}")
 
 
 def main(argv=None):

@@ -1,4 +1,9 @@
 from repro.optim.adamw import AdamW, AdamWState  # noqa: F401
-from repro.optim.dist import make_distributed_update, make_overlapped_update  # noqa: F401
+from repro.optim.dist import (  # noqa: F401
+    UpdatePlan,
+    make_distributed_update,
+    make_overlapped_update,
+    make_stale_sync_update,
+)
 from repro.optim.schedule import constant, linear_scale_warmup, warmup_cosine  # noqa: F401
 from repro.optim.sgd import MomentumSGD, SgdState  # noqa: F401

@@ -1,4 +1,4 @@
-"""Paper §3.4 — the distributed synchronous-SGD update, explicitly.
+"""Paper §3.4 — the distributed synchronous-SGD update, as a phase pipeline.
 
 Between local weight-gradient computation and the SGD step, gradients are
 **part-reduce**d over the data-parallel group: each group member receives the
@@ -7,15 +7,44 @@ only (optimizer state exists only for the strip — the paper's scheme is
 ZeRO-1 avant la lettre), then **part-broadcast**s the updated strip so every
 member again holds the full weights before the next forward pass.
 
+That update decomposes into three separable phases over one shared layout,
+and :class:`UpdatePlan` is that decomposition made explicit:
+
+    reduce(grads)  -> g_strips     one wire-dtype part-reduce per fusion
+                                   bucket, mean in fp32
+    apply(strips)  -> new strips   slice this member's param strips, run
+                                   the serial optimizer on its state row
+    broadcast(strips) -> params    one fp32 part-broadcast per bucket,
+                                   un-fuse back into tensors
+
+Every mode is a composition of the phases, not its own builder:
+
+  * ``make_distributed_update`` — reduce + apply + broadcast in one
+    shard_map (the monolithic zero1 step);
+  * ``make_overlapped_update`` — apply + broadcast only: the reduces were
+    issued inside the backward pass by the ``repro.comm.overlap`` hooks
+    (which share the reduce math via ``comm.schedule.reduce_mean``);
+  * ``comm=None`` — the seed per-tensor schedule is the SAME pipeline over
+    per-tensor buckets (``CommConfig(bucket_bytes=0)`` — ``plan_buckets``
+    then closes one bucket per leaf), not a separate code path;
+  * ``make_stale_sync_update`` — phase RE-SCHEDULING across steps: step t
+    applies the strips reduced at step t-1 from a carried buffer (bounded
+    staleness 1), which the strip-owner layout permits because reduce and
+    apply touch no shared state;
+  * ``parallel="gossip"`` — the same pipeline with the reduce phase's
+    collectives swapped for the GossipGraD partner exchange
+    (``comm.backends.gossip``; the schedule seam carries the step so the
+    partner rotation advances).
+
 Communication goes through ``repro.comm``: the gradient tree is coalesced
 into fixed-byte fusion buffers (``CommConfig.bucket_bytes``) so each BUCKET
-is one part-reduce/part-broadcast pair instead of one pair per tensor —
-collective count drops from O(#tensors) to O(total_bytes / bucket_bytes),
-which is what keeps VGG-A's many small conv/bias tensors out of the
-latency-bound regime of the §3.2 balance model.  ``comm=None`` selects the
-seed per-tensor schedule (kept as the reference the bucketed path is
-property-tested against); the optimizer itself is elementwise, so bucketed
-strips, per-tensor strips and the serial update agree to float tolerance.
+is one part-reduce/part-broadcast pair — collective count drops from
+O(#tensors) to O(total_bytes / bucket_bytes), which is what keeps VGG-A's
+many small conv/bias tensors out of the latency-bound regime of the §3.2
+balance model.  The optimizer itself is elementwise, so bucketed strips,
+per-tensor strips and the serial update agree to float tolerance — and the
+pipeline is BIT-equal to the pre-refactor builders (pinned in
+tests/test_distributed.py).
 
 This module is the explicit shard_map realization, used by the
 data-parallel examples and by the equivalence property tests
@@ -25,17 +54,24 @@ optimizer state carries data-axis sharding (see train/train_step.py).
 """
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.comm.bucketer import CommConfig, pack_bucket, plan_buckets, unpack_buckets
-from repro.comm.schedule import group_axes, make_schedule
-from repro.core.collectives import flatten_pad, strip_broadcast, strip_reduce
+from repro.comm.bucketer import (
+    BucketPlan,
+    CommConfig,
+    pack_bucket,
+    plan_buckets,
+    unpack_buckets,
+)
+from repro.comm.schedule import Schedule, group_axes, make_schedule, reduce_mean
 
 DEFAULT_COMM = CommConfig()
 
@@ -55,206 +91,259 @@ def owner_perm(hierarchical: bool, axes_sizes) -> Optional[np.ndarray]:
     return None
 
 
-def _owner_perm(comm: CommConfig, mesh: Mesh, axes):
-    return owner_perm(comm.hierarchical, [mesh.shape[a] for a in axes])
+@dataclass(frozen=True)
+class UpdatePlan:
+    """The shared layout + phase set of the §3.4 update path: which mesh
+    axes form the group, how the tree fuses into buckets, which member owns
+    which strip, and the three phases every mode composes.  ``build`` is
+    the one place the layout is derived, so the monolithic, overlapped,
+    per-tensor, stale-sync and gossip paths can never disagree on it."""
+    optimizer: Any
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    axis_arg: Any                  # single-name-or-tuple collective form
+    G: int
+    comm: CommConfig
 
+    @classmethod
+    def build(cls, optimizer, mesh: Mesh, data_axes=("data",),
+              comm: Optional[CommConfig] = DEFAULT_COMM) -> "UpdatePlan":
+        """``comm=None`` selects the seed per-tensor schedule — expressed
+        as per-tensor buckets (``bucket_bytes=0`` makes ``plan_buckets``
+        close one bucket per leaf), NOT a separate code path."""
+        axes, axis_arg, G = group_axes(mesh, data_axes)
+        if comm is None:
+            comm = CommConfig(bucket_bytes=0)
+        return cls(optimizer, mesh, axes, axis_arg, G, comm)
 
-def _make_bucketed_init(optimizer, mesh: Mesh, axes, axis_arg, G: int,
-                        comm: CommConfig):
-    """init_fn placing (G, n/G) fusion-buffer strip state on the mesh —
-    shared by the monolithic and the backprop-overlapped zero1 paths (both
-    consume the same plan and the same owner layout)."""
-    perm = _owner_perm(comm, mesh, axes)
+    # -- shared layout ------------------------------------------------
+    def buckets(self, params) -> BucketPlan:
+        return plan_buckets(params, self.G, self.comm.bucket_bytes)
 
-    def _strip_init(params):
-        plan = plan_buckets(params, G, comm.bucket_bytes)
-        flat = jax.tree.leaves(params)
-        # (G, n/G) fusion-buffer strips: dim 0 sharded over the data axes
-        strips = [pack_bucket(flat, b).reshape(G, -1) for b in plan.buckets]
-        if perm is not None:
-            strips = [s[perm] for s in strips]
-        return optimizer.init(strips)
+    def schedule(self, step=None) -> Schedule:
+        """The collective schedule, with ``step`` (may be traced) bound
+        into step-scheduled backends — the gossip partner rotation."""
+        return make_schedule(self.axis_arg, self.comm.hierarchical,
+                             self.comm.backend, self.comm.cross_backend,
+                             step=step)
 
-    def init_fn(params):
+    def owner_layout(self) -> Optional[np.ndarray]:
+        return owner_perm(self.comm.hierarchical,
+                          [self.mesh.shape[a] for a in self.axes])
+
+    def state_spec(self, s) -> P:
+        return _state_spec(s, self.axis_arg)
+
+    def init_fn(self, params):
+        """(G, n/G) fusion-buffer strip state placed on the mesh — shared
+        by every mode (all consume the same plan and owner layout, so a
+        checkpoint written by one path restores into another)."""
+        perm = self.owner_layout()
+
+        def _strip_init(params):
+            plan = self.buckets(params)
+            flat = jax.tree.leaves(params)
+            # (G, n/G) strips: dim 0 sharded over the data axes
+            strips = [pack_bucket(flat, b).reshape(self.G, -1)
+                      for b in plan.buckets]
+            if perm is not None:
+                strips = [s[perm] for s in strips]
+            return self.optimizer.init(strips)
+
         # compute replicated, then reshard with device_put: jit with
         # out_shardings miscompiles this pack+reshard pattern on jax 0.4.x
         # (values arrive multiplied by a mesh-axis extent)
-        with jax.set_mesh(mesh):
+        with jax.set_mesh(self.mesh):
             state = jax.jit(_strip_init)(params)
         shardings = jax.tree.map(
-            lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)), state)
+            lambda s: NamedSharding(self.mesh, self.state_spec(s)), state)
         return jax.tree.map(jax.device_put, state, shardings)
 
-    return init_fn
+    # -- the three phases (called INSIDE shard_map) --------------------
+    def reduce(self, sched: Schedule, plan: BucketPlan, grads):
+        """Phase 1: one part-reduce per BUCKET — pack gradients into the
+        fusion buffer, reduce on the wire dtype, mean in fp32.  Returns
+        this member's mean-gradient strip per bucket."""
+        flat_grads = jax.tree.leaves(grads)
+        return [reduce_mean(sched, pack_bucket(flat_grads, b),
+                            self.comm.wire_dtype, self.G)
+                for b in plan.buckets]
 
+    def apply(self, sched: Schedule, plan: BucketPlan, params, g_strips,
+              opt_state, lr):
+        """Phases 2–3: slice this member's param strips, run the serial
+        optimizer on its local state row (elementwise, so fusing tensors
+        into one buffer does not change the math).  ``opt_state`` enters in
+        shard_map-local layout (strips as (1, n/G) rows) and the new state
+        leaves the same way."""
+        flat_params = jax.tree.leaves(params)
+        i = sched.owner_index()
+        p_strips = []
+        for b in plan.buckets:
+            pbuf = pack_bucket(flat_params, b)
+            n = b.padded_size // self.G
+            p_strips.append(lax.dynamic_slice(pbuf, (i * n,), (n,)))
+        s_local = jax.tree.map(
+            lambda s: s[0] if s.ndim >= 2 else s, opt_state)
+        new_p_strips, new_state = self.optimizer.update(g_strips, s_local,
+                                                        p_strips, lr)
+        new_state = jax.tree.map(
+            lambda s: s[None] if s.ndim >= 1 else s, new_state)
+        return jax.tree.leaves(new_p_strips), new_state
 
-def _apply_strip_update(optimizer, sched, plan, G: int, params, g_strips,
-                        opt_state, lr):
-    """Steps 2–4 of the §3.4 update, INSIDE shard_map: slice this member's
-    param strips, run the optimizer on its local state row, part-broadcast
-    the updated strips, un-fuse back into tensors.  ``g_strips`` are the
-    already-reduced fp32 mean-gradient strips, one per bucket."""
-    flat_params, treedef = jax.tree.flatten(params)
-    i = sched.owner_index()
-    # 2) slice this member's strip of the (replicated) params
-    p_strips = []
-    for b in plan.buckets:
-        pbuf = pack_bucket(flat_params, b)
-        n = b.padded_size // G
-        p_strips.append(lax.dynamic_slice(pbuf, (i * n,), (n,)))
-    # 3) serial optimizer on the bucket strips (elementwise, so fusing
-    #    tensors into one buffer does not change the math); opt_state
-    #    enters as the local strip because shard_map split dim 0
-    s_local = jax.tree.map(
-        lambda s: s[0] if s.ndim >= 2 else s, opt_state)
-    new_p_strips, new_state = optimizer.update(g_strips, s_local,
-                                               p_strips, lr)
-    # 4) one part-broadcast per bucket (always fp32 — weights are never
-    #    quantized on the wire), then un-fuse back into tensors
-    bufs = [sched.broadcast(ps) for ps in jax.tree.leaves(new_p_strips)]
-    new_params = jax.tree.unflatten(treedef, unpack_buckets(bufs, plan))
-    new_state = jax.tree.map(
-        lambda s: s[None] if s.ndim >= 1 else s, new_state)
-    return new_params, new_state
+    def broadcast(self, sched: Schedule, plan: BucketPlan, params,
+                  new_p_strips):
+        """Phase 4: one part-broadcast per bucket (always fp32 — weights
+        are never quantized on the wire), then un-fuse back into tensors."""
+        bufs = [sched.broadcast(ps) for ps in new_p_strips]
+        treedef = jax.tree.structure(params)
+        return jax.tree.unflatten(treedef, unpack_buckets(bufs, plan))
+
+    # -- shard_map plumbing shared by the monolithic wrappers ----------
+    def wrap_update(self, _update):
+        """``_update(params, grads, opt_state, lr, step)`` (member code) ->
+        ``update_fn(params, grads, opt_state, lr, step=0)`` under shard_map
+        over the data axes.  ``step`` feeds step-scheduled backends and the
+        staleness carry; step-free modes ignore it, and omitting it keeps
+        the seed call shape."""
+        def update_fn(params, grads, opt_state, lr, step=0):
+            pspec = jax.tree.map(lambda _: P(), params)
+            sspec = jax.tree.map(self.state_spec, opt_state)
+            fn = jax.shard_map(
+                _update, mesh=self.mesh,
+                in_specs=(pspec, pspec, sspec, P(), P()),
+                out_specs=(pspec, sspec),
+                check_vma=False)
+            return fn(params, grads, opt_state, lr,
+                      jnp.asarray(step, jnp.int32))
+        return update_fn
 
 
 def make_distributed_update(optimizer, mesh: Mesh, data_axes=("data",),
                             comm: Optional[CommConfig] = DEFAULT_COMM):
     """Build (init_fn, update_fn) realizing the paper's update under
-    shard_map over ``data_axes``.  Params/grads enter replicated across the
-    data axes (grads are the LOCAL minibatch-shard gradients, summed over
-    local samples); optimizer state lives as per-member strips sharded on
-    dim 0 — per fusion bucket when ``comm`` is given, per tensor when
-    ``comm`` is None.  The bucketed collectives run on ``comm.backend``
-    (lax or the explicit Pallas ring — ``repro.comm.backends``).
+    shard_map over ``data_axes``: the full reduce -> apply -> broadcast
+    pipeline of one :class:`UpdatePlan`.  Params/grads enter replicated
+    across the data axes (grads are the LOCAL minibatch-shard gradients,
+    summed over local samples); optimizer state lives as per-member strips
+    sharded on dim 0 — per fusion bucket when ``comm`` is given, per tensor
+    when ``comm`` is None.  The bucketed collectives run on
+    ``comm.backend`` (``repro.comm.backends``).
 
-    update_fn(params, grads, opt_state, lr) -> (new_params, new_opt_state)
+    update_fn(params, grads, opt_state, lr, step=0)
+        -> (new_params, new_opt_state)
     """
-    axes, axis_arg, G = group_axes(mesh, data_axes)
+    up = UpdatePlan.build(optimizer, mesh, data_axes, comm)
 
-    if comm is None:
-        return _make_per_tensor_update(optimizer, mesh, axis_arg, G)
+    def _update(params, grads, opt_state, lr, step):
+        plan = up.buckets(params)
+        sched = up.schedule(step)
+        g_strips = up.reduce(sched, plan, grads)
+        new_p_strips, new_state = up.apply(sched, plan, params, g_strips,
+                                           opt_state, lr)
+        new_params = up.broadcast(sched, plan, params, new_p_strips)
+        return new_params, new_state
 
-    init_fn = _make_bucketed_init(optimizer, mesh, axes, axis_arg, G, comm)
-
-    def _update(params, grads, opt_state, lr):
-        plan = plan_buckets(params, G, comm.bucket_bytes)
-        sched = make_schedule(axis_arg, comm.hierarchical, comm.backend,
-                              comm.cross_backend)
-        flat_grads = jax.tree.leaves(grads)
-        # 1) one part-reduce per BUCKET: pack gradients into the fusion
-        #    buffer, reduce on the wire dtype, mean in fp32
-        g_strips = [sched.reduce(pack_bucket(flat_grads, b),
-                                 comm.wire_dtype) / G
-                    for b in plan.buckets]
-        return _apply_strip_update(optimizer, sched, plan, G, params,
-                                   g_strips, opt_state, lr)
-
-    def update_fn(params, grads, opt_state, lr):
-        pspec = jax.tree.map(lambda _: P(), params)
-        sspec = jax.tree.map(lambda s: _state_spec(s, axis_arg), opt_state)
-        fn = jax.shard_map(
-            _update, mesh=mesh,
-            in_specs=(pspec, pspec, sspec, P()),
-            out_specs=(pspec, sspec),
-            check_vma=False)
-        return fn(params, grads, opt_state, lr)
-
-    return init_fn, update_fn
+    return up.init_fn, up.wrap_update(_update)
 
 
 def make_overlapped_update(optimizer, mesh: Mesh, data_axes=("data",),
                            comm: Optional[CommConfig] = None):
-    """The backprop-overlapped counterpart of ``make_distributed_update``:
-    (init_fn, local_update) where ``local_update`` consumes per-bucket
-    ALREADY-REDUCED mean-gradient strips instead of a raw gradient tree —
-    the reduces were issued inside the backward pass by the
-    ``repro.comm.overlap`` hooks, so step 1 of the §3.4 schedule no longer
-    exists as a post-grad block.
+    """The backprop-overlapped composition: (init_fn, local_update) where
+    ``local_update`` is the apply + broadcast phases only — it consumes
+    per-bucket ALREADY-REDUCED mean-gradient strips instead of a raw
+    gradient tree, because the reduces were issued inside the backward pass
+    by the ``repro.comm.overlap`` hooks (which run the same
+    ``reduce_mean`` math), so the reduce phase no longer exists as a
+    post-grad block.
 
     Unlike ``make_distributed_update``'s update_fn, ``local_update(params,
     g_strips, opt_state, lr)`` must be called INSIDE ``shard_map`` over the
     same data axes: the overlapped train step owns the shard_map, because
     the bucket reduces live in its ``value_and_grad`` backward pass (see
     ``train.make_overlapped_train_step``).  ``init_fn`` is the shared
-    bucketed strip init — state layouts are identical, so a checkpoint
-    written by one path restores into the other.
+    strip init — state layouts are identical, so a checkpoint written by
+    one path restores into the other.
     """
     comm = DEFAULT_COMM if comm is None else comm
-    axes, axis_arg, G = group_axes(mesh, data_axes)
-    init_fn = _make_bucketed_init(optimizer, mesh, axes, axis_arg, G, comm)
-    sched = make_schedule(axis_arg, comm.hierarchical, comm.backend,
-                              comm.cross_backend)
+    up = UpdatePlan.build(optimizer, mesh, data_axes, comm)
+    sched = up.schedule()
 
     def local_update(params, g_strips, opt_state, lr):
-        plan = plan_buckets(params, G, comm.bucket_bytes)
-        return _apply_strip_update(optimizer, sched, plan, G, params,
-                                   g_strips, opt_state, lr)
+        plan = up.buckets(params)
+        new_p_strips, new_state = up.apply(sched, plan, params, g_strips,
+                                           opt_state, lr)
+        new_params = up.broadcast(sched, plan, params, new_p_strips)
+        return new_params, new_state
 
-    return init_fn, local_update
+    return up.init_fn, local_update
+
+
+def make_stale_sync_update(optimizer, mesh: Mesh, data_axes=("data",),
+                           comm: Optional[CommConfig] = None):
+    """Bounded staleness (staleness 1): step t APPLIES the mean-gradient
+    strips reduced at step t-1 and carries this step's freshly-reduced
+    strips for step t+1 — phase re-scheduling ACROSS steps, which the
+    strip-owner layout permits because the reduce and apply phases share no
+    state.  A full step of backprop/forward compute is then available to
+    hide every byte of the reduce (``core.balance.stale_sync_exposed_time``
+    is the model); the trade is a one-step-old gradient, bounded — unlike
+    fully-async parameter-server staleness.
+
+    opt_state wraps the zero1 strip state:
+
+        {"stale":  per-bucket (G, n/G) carried mean-gradient strips,
+         "synced": int32 flag — 0 until a reduce has been carried,
+         "zero1":  the inner strip state (BIT-identical layout to the
+                   synchronous modes', so zero1 checkpoints resume here
+                   with the buffer re-initialized — see ``api.run``)}
+
+    The first step (and the first step after a buffer re-init on resume)
+    applies its OWN reduce — there is nothing to consume yet, so it
+    degrades to the synchronous update rather than applying zeros.
+
+    update_fn(params, grads, opt_state, lr, step=0)
+        -> (new_params, new_opt_state)
+    """
+    comm = DEFAULT_COMM if comm is None else comm
+    up = UpdatePlan.build(optimizer, mesh, data_axes, comm)
+
+    def init_fn(params):
+        plan = up.buckets(params)
+        sh = NamedSharding(mesh, P(up.axis_arg))
+        stale = tuple(
+            jax.device_put(jnp.zeros((up.G, b.padded_size // up.G),
+                                     jnp.float32), sh)
+            for b in plan.buckets)
+        # the flag is committed replicated so restore can re-place onto
+        # its sharding (an uncommitted scalar would pin to device 0)
+        synced = jax.device_put(jnp.zeros((), jnp.int32),
+                                NamedSharding(mesh, P()))
+        return {"stale": stale, "synced": synced,
+                "zero1": up.init_fn(params)}
+
+    def _update(params, grads, opt_state, lr, step):
+        plan = up.buckets(params)
+        sched = up.schedule(step)
+        fresh = up.reduce(sched, plan, grads)
+        carried = [s[0] for s in opt_state["stale"]]
+        synced = opt_state["synced"]
+        # consume LAST step's reduce; an empty buffer (first step, or a
+        # resume that re-initialized it) falls back to this step's own
+        applied = [jnp.where(synced > 0, c, f)
+                   for c, f in zip(carried, fresh)]
+        new_p_strips, new_inner = up.apply(sched, plan, params, applied,
+                                           opt_state["zero1"], lr)
+        new_params = up.broadcast(sched, plan, params, new_p_strips)
+        new_state = {"stale": tuple(f[None] for f in fresh),
+                     "synced": jnp.ones((), jnp.int32),
+                     "zero1": new_inner}
+        return new_params, new_state
+
+    return init_fn, up.wrap_update(_update)
 
 
 def _state_spec(s, axis_arg) -> P:
     # strip tensors are (G, n/G): dim 0 sharded; scalars (e.g. AdamW
-    # step count) replicated
+    # step count, the staleness flag) replicated
     return P(axis_arg) if getattr(s, "ndim", 0) >= 2 else P()
-
-
-def _make_per_tensor_update(optimizer, mesh: Mesh, axis_arg, G: int):
-    """The seed schedule: one part-reduce/part-broadcast pair PER TENSOR.
-    Latency-bound for nets with many small tensors (§3.2); retained as the
-    reference implementation the bucketed path is tested against."""
-
-    def _strip_init(params):
-        def per_tensor(p):
-            flat = flatten_pad(p, G)
-            return flat.reshape(G, -1)
-        return optimizer.init(jax.tree.map(per_tensor, params))
-
-    def init_fn(params):
-        # see the bucketed init_fn: device_put instead of out_shardings
-        with jax.set_mesh(mesh):
-            state = jax.jit(_strip_init)(params)
-        shardings = jax.tree.map(
-            lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)), state)
-        return jax.tree.map(jax.device_put, state, shardings)
-
-    def _update(params, grads, opt_state, lr):
-        flat_params, treedef = jax.tree.flatten(params)
-        flat_grads = jax.tree.leaves(grads)
-
-        # 1) part-reduce every gradient into this member's strip (mean)
-        g_strips = [strip_reduce(g, axis_arg) for g in flat_grads]
-        # 2) slice this member's strip of the (replicated) params
-        i = make_schedule(axis_arg).owner_index()
-        p_strips = []
-        for p in flat_params:
-            flat = flatten_pad(p, G)
-            n = flat.size // G
-            p_strips.append(lax.dynamic_slice(flat, (i * n,), (n,)))
-        # 3) serial optimizer on the strips
-        g_tree = jax.tree.unflatten(treedef, g_strips)
-        p_tree = jax.tree.unflatten(treedef, p_strips)
-        s_local = jax.tree.map(
-            lambda s: s[0] if s.ndim >= 2 else s, opt_state)
-        new_p_strips, new_state = optimizer.update(g_tree, s_local, p_tree, lr)
-        # 4) part-broadcast updated strips back to full tensors
-        new_flat = []
-        for p, ps in zip(flat_params, jax.tree.leaves(new_p_strips)):
-            new_flat.append(strip_broadcast(ps, axis_arg, p.shape))
-        new_params = jax.tree.unflatten(treedef, new_flat)
-        new_state = jax.tree.map(
-            lambda s: s[None] if s.ndim >= 1 else s, new_state)
-        return new_params, new_state
-
-    def update_fn(params, grads, opt_state, lr):
-        pspec = jax.tree.map(lambda _: P(), params)
-        sspec = jax.tree.map(lambda s: _state_spec(s, axis_arg), opt_state)
-        fn = jax.shard_map(
-            _update, mesh=mesh,
-            in_specs=(pspec, pspec, sspec, P()),
-            out_specs=(pspec, sspec),
-            check_vma=False)
-        return fn(params, grads, opt_state, lr)
-
-    return init_fn, update_fn

@@ -42,12 +42,15 @@ def make_train_step(loss_fn: Callable, optimizer, lr_schedule,
     step(params, opt_state, step_idx, batch) -> (params, opt_state, metrics).
 
     ``dist_update`` (optional): an explicit distributed update
-    ``(params, grads, opt_state, lr) -> (new_params, new_opt_state)`` — the
-    ``update_fn`` built by ``optim.dist.make_distributed_update`` — replacing
-    the serial ``optimizer.update``.  This is the explicit ZeRO-1 path: the
-    step's gradients flow through the bucketed part-reduce, the strip
-    optimizer, and the bucketed part-broadcast of ``repro.comm``.  The
-    matching ``opt_state`` must come from the same builder's ``init_fn``.
+    ``(params, grads, opt_state, lr, step) -> (new_params, new_opt_state)``
+    — the ``update_fn`` built by ``optim.dist.make_distributed_update`` /
+    ``make_stale_sync_update`` — replacing the serial ``optimizer.update``.
+    This is the explicit ZeRO-1 path: the step's gradients flow through the
+    bucketed part-reduce, the strip optimizer, and the bucketed
+    part-broadcast of ``repro.comm``.  ``step_idx`` is forwarded so
+    step-scheduled modes (the gossip partner rotation, the staleness carry)
+    see the train step; step-free modes ignore it.  The matching
+    ``opt_state`` must come from the same builder's ``init_fn``.
     """
     def train_step(params, opt_state, step_idx, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
@@ -57,7 +60,8 @@ def make_train_step(loss_fn: Callable, optimizer, lr_schedule,
             grads = jax.tree.map(lambda g: g * scale, grads)
         lr = lr_schedule(step_idx)
         if dist_update is not None:
-            new_params, new_state = dist_update(params, grads, opt_state, lr)
+            new_params, new_state = dist_update(params, grads, opt_state, lr,
+                                                step_idx)
         else:
             new_params, new_state = optimizer.update(grads, opt_state,
                                                      params, lr)

@@ -32,6 +32,92 @@ def test_runspec_validates_fields():
     assert dataclasses.replace(spec, parallel="zero1").parallel == "zero1"
 
 
+def test_mode_caps_table_drives_validation():
+    """Satellite: the MODE_CAPS capability table replaces the comm->zero1
+    special-case.  Every parallel mode has an entry, and each comm knob is
+    accepted or rejected per the table, not per hard-coded mode names."""
+    from repro.api import MODE_CAPS, PARALLEL_MODES, ModeCaps, RunSpec
+    from repro.comm import CommConfig
+
+    assert set(PARALLEL_MODES) == set(MODE_CAPS)
+    assert {"serial", "dp", "zero1", "zero1-gspmd",
+            "stale-sync", "gossip"} <= set(MODE_CAPS)
+    assert isinstance(MODE_CAPS["zero1"], ModeCaps)
+
+    # commful modes accept comm; comm-less modes reject it
+    for mode in ("zero1", "stale-sync", "gossip"):
+        assert MODE_CAPS[mode].comm
+    RunSpec(arch="vgg-a", parallel="stale-sync",
+            comm=CommConfig(bucket_bytes=1 << 14))
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", parallel="serial", comm=CommConfig())
+
+    # overlap is a zero1-only capability: stale-sync re-schedules the
+    # reduce across steps itself, so the backward-pass hooks don't apply
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", parallel="stale-sync",
+                comm=CommConfig(overlap=True))
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", parallel="gossip",
+                comm=CommConfig(overlap=True, backend="gossip"))
+
+    # the gossip backend is selected by parallel="gossip", not as a zero1
+    # backend swap (it changes the consistency model, not just the wire)
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", parallel="zero1",
+                comm=CommConfig(backend="gossip"))
+    RunSpec(arch="vgg-a", parallel="gossip",
+            comm=CommConfig(backend="gossip"))
+    # stale-sync runs the synchronous wire: lax or the Pallas ring
+    RunSpec(arch="vgg-a", parallel="stale-sync",
+            comm=CommConfig(backend="pallas-ring"))
+    with pytest.raises(ValueError):
+        RunSpec(arch="vgg-a", parallel="stale-sync",
+                comm=CommConfig(backend="gossip"))
+
+
+def test_mode_caps_drive_cli_mapping():
+    """launch.train derives its argument checks and backend defaults from
+    MODE_CAPS: --parallel gossip flips the default --comm-backend to
+    gossip and stays flat even under --pods 2."""
+    import argparse
+
+    from repro.launch.train import add_run_args, check_run_args, \
+        spec_from_args
+
+    ap = add_run_args(argparse.ArgumentParser())
+
+    def parse(*argv):
+        return ap.parse_args(list(argv))
+
+    args = parse("--arch", "vgg-a", "--smoke", "--parallel", "gossip",
+                 "--pods", "2", "--bucket-mb", "4")
+    check_run_args(ap, args)
+    spec = spec_from_args(args)
+    assert spec.comm.backend == "gossip"
+    assert not spec.comm.hierarchical
+
+    # no comm flags -> comm stays None; assemble picks the mode default
+    assert spec_from_args(parse("--arch", "vgg-a", "--smoke",
+                                "--parallel", "gossip")).comm is None
+
+    args = parse("--arch", "vgg-a", "--smoke", "--parallel", "stale-sync",
+                 "--bucket-mb", "4")
+    check_run_args(ap, args)
+    assert spec_from_args(args).comm.bucket_bytes == 4 * 2 ** 20
+
+    with pytest.raises(SystemExit):
+        check_run_args(ap, parse("--arch", "vgg-a", "--smoke",
+                                 "--parallel", "stale-sync", "--overlap"))
+    with pytest.raises(SystemExit):
+        check_run_args(ap, parse("--arch", "vgg-a", "--smoke",
+                                 "--parallel", "zero1",
+                                 "--comm-backend", "gossip"))
+    with pytest.raises(SystemExit):
+        check_run_args(ap, parse("--arch", "vgg-a", "--smoke",
+                                 "--parallel", "serial", "--bucket-mb", "4"))
+
+
 def test_meshspec_axes():
     from repro.api import MeshSpec
     assert MeshSpec().axis_names == ("data", "model")
@@ -108,7 +194,8 @@ def test_trainer_counts_samples_for_vision_batches():
 # ---------------------------------------------------------------------------
 # compile matrix: every arch x every parallel mode assembles
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("parallel", ["serial", "dp", "zero1"])
+@pytest.mark.parametrize("parallel", ["serial", "dp", "zero1",
+                                      "stale-sync", "gossip"])
 def test_compile_run_matrix(parallel):
     import jax
 
@@ -327,5 +414,46 @@ def test_api_pallas_ring_matches_serial_vgg():
                             jax.tree.leaves(rz.params)):
                 np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                            rtol=1e-4, atol=1e-6, err_msg=tag)
+        print("OK")
+    """)
+
+
+def test_api_stale_sync_and_gossip_converge_vs_serial():
+    """The relaxed-consistency acceptance property, on both paper
+    workloads: (a) gossip — every member computes the same global-batch
+    gradient in this single-process emulation, so the pair mean equals the
+    full mean and the run must TRACK serial to float tolerance; (b)
+    stale-sync — a one-step-old gradient, so the trajectory lags but must
+    still optimize (VGG-A: large loss drop) and stay glued to serial where
+    the landscape is flat (cd-dnn)."""
+    run_py("""
+        import numpy as np
+        from repro.api import RunSpec, compile_run
+        quiet = lambda *_: None
+
+        def fit(arch, mode, steps, lr):
+            r = compile_run(RunSpec(arch=arch, smoke=True, parallel=mode,
+                                    steps=steps, batch=8, lr=lr,
+                                    schedule="constant", log_every=100,
+                                    seed=0))
+            h = r.fit(log_fn=quiet); r.close()
+            return [float(x["loss"]) for x in h]
+
+        # VGG-A: all three modes must actually train
+        serial = fit("vgg-a", "serial", 12, 5e-3)
+        gossip = fit("vgg-a", "gossip", 12, 5e-3)
+        stale = fit("vgg-a", "stale-sync", 12, 5e-3)
+        np.testing.assert_allclose(gossip, serial, rtol=1e-4)
+        assert serial[-1] < 0.5 * serial[0], serial
+        assert stale[-1] < 0.5 * stale[0], stale
+        # one-step staleness lags but stays the same order as serial
+        assert stale[-1] < 2.0 * serial[-1], (stale[-1], serial[-1])
+
+        # cd-dnn: both modes track the serial trajectory
+        serial = fit("cd-dnn", "serial", 8, 5e-4)
+        gossip = fit("cd-dnn", "gossip", 8, 5e-4)
+        stale = fit("cd-dnn", "stale-sync", 8, 5e-4)
+        np.testing.assert_allclose(gossip, serial, rtol=1e-4)
+        np.testing.assert_allclose(stale, serial, rtol=5e-2, atol=5e-2)
         print("OK")
     """)

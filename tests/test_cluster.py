@@ -415,3 +415,84 @@ def test_comm_config_cross_backend_validation():
     CommConfig(cross_backend="pallas-ring")   # valid
     with pytest.raises(ValueError, match="cross_backend"):
         CommConfig(cross_backend="smoke-signals")
+
+
+# ---------------------------------------------------------------------------
+# mode interop: a zero1 checkpoint resumes under stale-sync
+# ---------------------------------------------------------------------------
+
+def test_zero1_ckpt_resumes_under_stale_sync_same_world(tmp_path):
+    """The inner strip state of stale-sync is BIT-identical to zero1's, so
+    a zero1 checkpoint restores into a stale-sync run with the staleness
+    buffer re-initialized — and the first post-resume step is then exactly
+    synchronous (empty carry), so training one step past the checkpoint
+    must land on the SAME params as an uninterrupted zero1 run."""
+    ckpt = str(tmp_path / "ckpt")
+    out = run_py(f"""
+        import numpy as np, jax
+        from repro.api import RunSpec, compile_run
+        quiet = lambda *_: None
+        base = RunSpec(arch="vgg-a", smoke=True, steps=3, batch=8,
+                       schedule="constant", parallel="zero1",
+                       ckpt_dir={ckpt!r}, ckpt_every=3, log_every=100)
+        rz = compile_run(base)
+        rz.fit(log_fn=quiet); rz.close()
+
+        # resume the zero1 checkpoint under stale-sync, train ONE step
+        logs = []
+        rs = compile_run(base.replace(parallel="stale-sync", steps=4,
+                                      ckpt_every=0))
+        rs.fit(log_fn=logs.append)
+        assert any("resuming from checkpoint step 3" in str(ln)
+                   for ln in logs), logs
+        assert set(rs.opt_state) == {{"stale", "synced", "zero1"}}
+        rs.close()
+
+        # uninterrupted zero1 for the same 4 steps
+        ref = compile_run(base.replace(steps=4, ckpt_dir=None,
+                                       ckpt_every=0))
+        ref.fit(log_fn=quiet); ref.close()
+        for a, b in zip(jax.tree.leaves(rs.params),
+                        jax.tree.leaves(ref.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-7)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.parametrize("resume_devices,resume_pods", [(4, 1), (2, 1)])
+def test_zero1_ckpt_resumes_under_stale_sync_across_worlds(
+        tmp_path, resume_devices, resume_pods):
+    """Cross-world interop: a hierarchical G=8 zero1 checkpoint restores
+    into a FLAT smaller-world stale-sync run — the inner strips are
+    re-planned (owner layout included), the staleness buffer re-initialized
+    at the new world's bucket geometry.  One synchronous post-resume step
+    must match uninterrupted zero1 at the RESUME world size (the §3.4
+    update is G-invariant to float tolerance)."""
+    ckpt = str(tmp_path / "ckpt")
+    run_py(_STAGE.format(pods=2, steps=3, ckpt_dir=ckpt, ckpt_every=3,
+                         fit_args=""), devices=8)
+    out = run_py(f"""
+        import numpy as np, jax
+        from repro.api import MeshSpec, RunSpec, compile_run
+        quiet = lambda *_: None
+        base = RunSpec(arch="vgg-a", smoke=True, steps=4, batch=8,
+                       schedule="constant", mesh=MeshSpec(pods={resume_pods}),
+                       log_every=100)
+        logs = []
+        rs = compile_run(base.replace(parallel="stale-sync",
+                                      ckpt_dir={ckpt!r}))
+        rs.fit(log_fn=logs.append)
+        assert any("resuming from checkpoint step 3" in str(ln)
+                   for ln in logs), logs
+        rs.close()
+        ref = compile_run(base.replace(parallel="zero1"))
+        ref.fit(log_fn=quiet); ref.close()
+        for a, b in zip(jax.tree.leaves(rs.params),
+                        jax.tree.leaves(ref.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-6)
+        print("OK")
+    """, devices=resume_devices)
+    assert "OK" in out

@@ -364,7 +364,7 @@ def test_make_schedule_binds_backends_per_level():
 
 def test_get_backend_and_commconfig_validate_names():
     from repro.comm import COLLECTIVE_BACKENDS, get_backend
-    assert set(COLLECTIVE_BACKENDS) == {"lax", "pallas-ring"}
+    assert set(COLLECTIVE_BACKENDS) == {"lax", "pallas-ring", "gossip"}
     with pytest.raises(ValueError, match="nccl"):
         get_backend("nccl")
     # a real exception (never assert: -O must not disable config validation)

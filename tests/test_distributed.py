@@ -638,3 +638,344 @@ def test_pallas_ring_zero1_matches_serial():
                             rtol=1e-5, atol=1e-6, err_msg=f"{tag}/{k}")
         print("OK")
     """)
+
+
+def test_phase_pipeline_bit_exact_vs_seed_builders():
+    """The refactor contract: the UpdatePlan phase pipeline is BIT-equal to
+    the pre-refactor builders for every existing mode.  The seed
+    implementations (per-tensor schedule, bucketed monolithic update,
+    bucketed apply+broadcast tail) are copied verbatim below and both
+    stacks run two momentum steps from the same start; params and state
+    leaves must match with assert_array_equal — no tolerance."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import lax
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.comm import CommConfig
+        from repro.comm.bucketer import pack_bucket, plan_buckets, \\
+            unpack_buckets
+        from repro.comm.schedule import group_axes, make_schedule
+        from repro.core.collectives import flatten_pad, strip_broadcast, \\
+            strip_reduce
+        from repro.optim import MomentumSGD
+        from repro.optim.dist import _state_spec, make_distributed_update, \\
+            make_overlapped_update, owner_perm
+
+        # ---- seed builders, verbatim from the pre-refactor module ----
+        def seed_bucketed_init(optimizer, mesh, axes, axis_arg, G, comm):
+            perm = owner_perm(comm.hierarchical,
+                              [mesh.shape[a] for a in axes])
+            def _strip_init(params):
+                plan = plan_buckets(params, G, comm.bucket_bytes)
+                flat = jax.tree.leaves(params)
+                strips = [pack_bucket(flat, b).reshape(G, -1)
+                          for b in plan.buckets]
+                if perm is not None:
+                    strips = [s[perm] for s in strips]
+                return optimizer.init(strips)
+            def init_fn(params):
+                with jax.set_mesh(mesh):
+                    state = jax.jit(_strip_init)(params)
+                sh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)),
+                    state)
+                return jax.tree.map(jax.device_put, state, sh)
+            return init_fn
+
+        def seed_apply(optimizer, sched, plan, G, params, g_strips,
+                       opt_state, lr):
+            flat_params, treedef = jax.tree.flatten(params)
+            i = sched.owner_index()
+            p_strips = []
+            for b in plan.buckets:
+                pbuf = pack_bucket(flat_params, b)
+                n = b.padded_size // G
+                p_strips.append(lax.dynamic_slice(pbuf, (i * n,), (n,)))
+            s_local = jax.tree.map(
+                lambda s: s[0] if s.ndim >= 2 else s, opt_state)
+            new_p_strips, new_state = optimizer.update(g_strips, s_local,
+                                                       p_strips, lr)
+            bufs = [sched.broadcast(ps)
+                    for ps in jax.tree.leaves(new_p_strips)]
+            new_params = jax.tree.unflatten(treedef,
+                                            unpack_buckets(bufs, plan))
+            new_state = jax.tree.map(
+                lambda s: s[None] if s.ndim >= 1 else s, new_state)
+            return new_params, new_state
+
+        def seed_bucketed(optimizer, mesh, data_axes, comm):
+            axes, axis_arg, G = group_axes(mesh, data_axes)
+            init_fn = seed_bucketed_init(optimizer, mesh, axes, axis_arg,
+                                         G, comm)
+            def _update(params, grads, opt_state, lr):
+                plan = plan_buckets(params, G, comm.bucket_bytes)
+                sched = make_schedule(axis_arg, comm.hierarchical,
+                                      comm.backend, comm.cross_backend)
+                flat_grads = jax.tree.leaves(grads)
+                g_strips = [sched.reduce(pack_bucket(flat_grads, b),
+                                         comm.wire_dtype) / G
+                            for b in plan.buckets]
+                return seed_apply(optimizer, sched, plan, G, params,
+                                  g_strips, opt_state, lr)
+            def update_fn(params, grads, opt_state, lr):
+                pspec = jax.tree.map(lambda _: P(), params)
+                sspec = jax.tree.map(
+                    lambda s: _state_spec(s, axis_arg), opt_state)
+                fn = jax.shard_map(_update, mesh=mesh,
+                                   in_specs=(pspec, pspec, sspec, P()),
+                                   out_specs=(pspec, sspec),
+                                   check_vma=False)
+                return fn(params, grads, opt_state, lr)
+            return init_fn, update_fn
+
+        def seed_per_tensor(optimizer, mesh, data_axes):
+            axes, axis_arg, G = group_axes(mesh, data_axes)
+            def _strip_init(params):
+                def per_tensor(p):
+                    return flatten_pad(p, G).reshape(G, -1)
+                return optimizer.init(jax.tree.map(per_tensor, params))
+            def init_fn(params):
+                with jax.set_mesh(mesh):
+                    state = jax.jit(_strip_init)(params)
+                sh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, _state_spec(s, axis_arg)),
+                    state)
+                return jax.tree.map(jax.device_put, state, sh)
+            def _update(params, grads, opt_state, lr):
+                flat_params, treedef = jax.tree.flatten(params)
+                flat_grads = jax.tree.leaves(grads)
+                g_strips = [strip_reduce(g, axis_arg) for g in flat_grads]
+                i = make_schedule(axis_arg).owner_index()
+                p_strips = []
+                for p in flat_params:
+                    flat = flatten_pad(p, G)
+                    n = flat.size // G
+                    p_strips.append(lax.dynamic_slice(flat, (i * n,), (n,)))
+                g_tree = jax.tree.unflatten(treedef, g_strips)
+                p_tree = jax.tree.unflatten(treedef, p_strips)
+                s_local = jax.tree.map(
+                    lambda s: s[0] if s.ndim >= 2 else s, opt_state)
+                new_p_strips, new_state = optimizer.update(
+                    g_tree, s_local, p_tree, lr)
+                new_flat = [strip_broadcast(ps, axis_arg, p.shape)
+                            for p, ps in zip(flat_params,
+                                             jax.tree.leaves(new_p_strips))]
+                new_params = jax.tree.unflatten(treedef, new_flat)
+                new_state = jax.tree.map(
+                    lambda s: s[None] if s.ndim >= 1 else s, new_state)
+                return new_params, new_state
+            def update_fn(params, grads, opt_state, lr):
+                pspec = jax.tree.map(lambda _: P(), params)
+                sspec = jax.tree.map(
+                    lambda s: _state_spec(s, axis_arg), opt_state)
+                fn = jax.shard_map(_update, mesh=mesh,
+                                   in_specs=(pspec, pspec, sspec, P()),
+                                   out_specs=(pspec, sspec),
+                                   check_vma=False)
+                return fn(params, grads, opt_state, lr)
+            return init_fn, update_fn
+
+        # ---- the matrix ----
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+        opt = MomentumSGD(momentum=0.9, weight_decay=0.01)
+        params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) / 7,
+                  "b": jnp.ones((5,), jnp.float32),
+                  "c": jnp.cos(jnp.arange(40, dtype=jnp.float32))}
+        g1 = jax.tree.map(jnp.cos, params)
+        g2 = jax.tree.map(jnp.sin, params)
+
+        def two_steps(init_fn, update_fn):
+            with jax.set_mesh(mesh):
+                st = init_fn(params)
+                p, st = jax.jit(update_fn)(params, g1, st, 0.05)
+                p, st = jax.jit(update_fn)(p, g2, st, 0.05)
+            return p, st
+
+        def check(tag, seed_pair, new_pair):
+            ps, ss = two_steps(*seed_pair)
+            pn, sn = two_steps(*new_pair)
+            for k in params:
+                np.testing.assert_array_equal(
+                    np.asarray(ps[k]), np.asarray(pn[k]),
+                    err_msg=f"{tag}/params/{k}")
+            # seed per-tensor state is tree-shaped, the pipeline's is a
+            # strip list — leaves match positionally
+            for a, b in zip(jax.tree.leaves(ss), jax.tree.leaves(sn)):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b), err_msg=f"{tag}/state")
+
+        check("per-tensor",
+              seed_per_tensor(opt, mesh, ("pod", "data")),
+              make_distributed_update(opt, mesh, data_axes=("pod", "data"),
+                                      comm=None))
+        for comm in (CommConfig(bucket_bytes=64),
+                     CommConfig(bucket_bytes=64, hierarchical=True),
+                     CommConfig(bucket_bytes=64, backend="pallas-ring"),
+                     CommConfig(bucket_bytes=1 << 20, hierarchical=True,
+                                reduce_dtype="bfloat16")):
+            tag = (f"bkt{comm.bucket_bytes}/hier={comm.hierarchical}"
+                   f"/{comm.backend}/{comm.reduce_dtype}")
+            check(tag,
+                  seed_bucketed(opt, mesh, ("pod", "data"), comm),
+                  make_distributed_update(opt, mesh,
+                                          data_axes=("pod", "data"),
+                                          comm=comm))
+
+        # overlapped tail (apply + broadcast on pre-reduced strips): seed
+        # _apply_strip_update vs the pipeline's local_update, same inputs
+        comm = CommConfig(bucket_bytes=64, hierarchical=True, overlap=True)
+        axes, axis_arg, G = group_axes(mesh, ("pod", "data"))
+        init_new, local_new = make_overlapped_update(
+            opt, mesh, data_axes=("pod", "data"), comm=comm)
+        init_seed = seed_bucketed_init(opt, mesh, axes, axis_arg, G, comm)
+
+        def driver(local_update):
+            def _inner(params, grads, opt_state, lr):
+                plan = plan_buckets(params, G, comm.bucket_bytes)
+                sched = make_schedule(axis_arg, comm.hierarchical,
+                                      comm.backend, comm.cross_backend)
+                flat_grads = jax.tree.leaves(grads)
+                g_strips = [sched.reduce(pack_bucket(flat_grads, b),
+                                         comm.wire_dtype) / G
+                            for b in plan.buckets]
+                return local_update(params, g_strips, opt_state, lr)
+            def update_fn(params, grads, opt_state, lr):
+                pspec = jax.tree.map(lambda _: P(), params)
+                sspec = jax.tree.map(
+                    lambda s: _state_spec(s, axis_arg), opt_state)
+                fn = jax.shard_map(_inner, mesh=mesh,
+                                   in_specs=(pspec, pspec, sspec, P()),
+                                   out_specs=(pspec, sspec),
+                                   check_vma=False)
+                return fn(params, grads, opt_state, lr)
+            return update_fn
+
+        def seed_local(params, g_strips, opt_state, lr):
+            plan = plan_buckets(params, G, comm.bucket_bytes)
+            sched = make_schedule(axis_arg, comm.hierarchical,
+                                  comm.backend, comm.cross_backend)
+            return seed_apply(opt, sched, plan, G, params, g_strips,
+                              opt_state, lr)
+
+        check("overlap-tail",
+              (init_seed, driver(seed_local)),
+              (init_new, driver(local_new)))
+        print("OK")
+    """)
+
+
+def test_gossip_backend_pair_exchange_rotation():
+    """comm.backends.gossip semantics at the primitive level: at step t
+    member i's part_reduce strip is (own chunk i + chunk i of partner
+    (i - s) % G) * G/2 with the GossipGraD shift s = 1 + t % (G-1) — so
+    the schedule's /G yields the PAIR mean, every member is in exactly one
+    exchange per step, and the rotation sweeps all G-1 partners before
+    repeating."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType, PartitionSpec as P
+        from repro.comm.backends import get_backend
+        from repro.comm.schedule import bind_step
+
+        G, n = 8, 16
+        mesh = jax.make_mesh((G,), ("data",), axis_types=(AxisType.Auto,))
+        x = np.arange(G * n, dtype=np.float32).reshape(G, n) / 3.0
+        chunks = x.reshape(G, G, n // G)      # [member, chunk, elems]
+
+        for step in range(2 * (G - 1) + 1):
+            b = bind_step(get_backend("gossip"), jnp.asarray(step))
+            def f(row):
+                return b.part_reduce(row[0], "data")[None]
+            with jax.set_mesh(mesh):
+                got = jax.jit(jax.shard_map(
+                    f, mesh=mesh, in_specs=P("data"),
+                    out_specs=P("data"), check_vma=False))(jnp.asarray(x))
+            s = 1 + step % (G - 1)
+            want = np.stack([(chunks[i, i] + chunks[(i - s) % G, i])
+                             * (G / 2.0) for i in range(G)])
+            np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6,
+                                       err_msg=f"step={step}")
+            # symmetry: i's partner (i-s) has i as ITS partner at the same
+            # step iff shifts cancel mod G — verified implicitly by the
+            # ppermute pair construction; check every member appears once
+            partners = {(i, (i - s) % G) for i in range(G)}
+            assert len({p for p, _ in partners}) == G
+        print("OK")
+    """)
+
+
+def test_gossip_g2_matches_zero1_bitwise():
+    """At G=2 the rotation is degenerate (the only partner is the other
+    member), so gossip IS full synchronous data parallelism: the gossip
+    update must be bitwise identical to zero1, params and state."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.comm import CommConfig
+        from repro.optim import MomentumSGD
+        from repro.optim.dist import make_distributed_update
+        mesh = jax.make_mesh((2,), ("data",), axis_types=(AxisType.Auto,))
+        opt = MomentumSGD(momentum=0.9)
+        params = {"w": jnp.linspace(-1, 1, 37, dtype=jnp.float32),
+                  "b": jnp.cos(jnp.arange(11, dtype=jnp.float32))}
+        grads = [jax.tree.map(lambda p: jnp.sin(p + t), params)
+                 for t in range(3)]
+
+        def run(backend):
+            comm = CommConfig(bucket_bytes=64, backend=backend)
+            init_fn, update_fn = make_distributed_update(
+                opt, mesh, comm=comm)
+            with jax.set_mesh(mesh):
+                p, st = params, init_fn(params)
+                for t, g in enumerate(grads):
+                    p, st = jax.jit(update_fn)(p, g, st, 0.05, t)
+            return p, st
+
+        pz, sz = run("lax")
+        pg, sg = run("gossip")
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(pz[k]),
+                                          np.asarray(pg[k]), err_msg=k)
+        for a, b in zip(jax.tree.leaves(sz), jax.tree.leaves(sg)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """, devices=2)
+
+
+def test_stale_sync_applies_previous_steps_gradient():
+    """make_stale_sync_update semantics: step 0 applies its OWN reduce
+    (empty carry), step t>0 applies step t-1's — so feeding gradients
+    [g0, g1, g2] must land exactly where the serial optimizer lands on
+    [g0, g0, g1], and the carried buffer always holds the LAST reduce."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.comm import CommConfig
+        from repro.optim import MomentumSGD
+        from repro.optim.dist import make_stale_sync_update
+        mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+        opt = MomentumSGD(momentum=0.9, weight_decay=0.01)
+        params = {"w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6) / 11,
+                  "b": jnp.ones((7,), jnp.float32)}
+        gs = [jax.tree.map(lambda p: jnp.cos(p + t), params)
+              for t in range(3)]
+
+        init_fn, update_fn = make_stale_sync_update(
+            opt, mesh, comm=CommConfig(bucket_bytes=64))
+        with jax.set_mesh(mesh):
+            p, st = params, init_fn(params)
+            assert int(st["synced"]) == 0
+            for t, g in enumerate(gs):
+                p, st = jax.jit(update_fn)(p, g, st, 0.05, t)
+                assert int(st["synced"]) == 1
+
+        # serial reference on the staleness-shifted gradient sequence
+        rp, rs = params, opt.init(params)
+        for g in [gs[0], gs[0], gs[1]]:
+            rp, rs = opt.update(g, rs, rp, 0.05)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(p[k]), np.asarray(rp[k]),
+                                       rtol=1e-5, atol=1e-7, err_msg=k)
+        print("OK")
+    """, devices=4)
