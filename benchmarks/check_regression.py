@@ -1,0 +1,179 @@
+"""Benchmark regression gate: fresh BENCH_*.json vs the committed baselines.
+
+CI regenerates each benchmark report into a scratch dir and this script
+compares it against the baseline committed under ``benchmarks/``, one
+tolerance rule per metric class:
+
+* **deterministic** metrics (the closed-form §3.2/§3.3 model predictions,
+  request/token counts of a seeded workload) must match the baseline to a
+  tight relative band or exactly — a drift here means the MODEL changed,
+  not the machine;
+* **gate** metrics are hard floors/booleans (bucketing must win, the
+  128-node hierarchical speedup must hold, every kernel must match its
+  oracle) — these replace the inline asserts that used to live in ci.yml;
+* **wall-clock** metrics (measured collective times, kernel µs, serve
+  latencies/throughput) are advisory: shared CI runners are far too noisy
+  to gate on, so out-of-band values print a warning but never fail.
+
+    PYTHONPATH=src:. python benchmarks/check_regression.py \\
+        --fresh-dir /tmp/bench            # baselines default to benchmarks/
+
+Exits nonzero on any regression (tight-band violation, gate failure, or a
+baselined metric missing from the fresh report).
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from pathlib import Path
+
+#: per-file rule tables: first pattern (fnmatch on the flattened dotted
+#: path) that matches a metric wins.  Rule kinds:
+#:   ("rel", tol)       |fresh-base| <= tol*max(|base|,1e-12)   -> else FAIL
+#:   ("equal",)         fresh == base                           -> else FAIL
+#:   ("floor", x)       fresh > x (baseline not consulted)      -> else FAIL
+#:   ("advisory", r)    warn when fresh/base leaves [1/r, r]    -> never FAIL
+#:   ("ignore",)        not compared
+RULES = {
+    "BENCH_comm.json": [
+        ("gates.min_predicted_bucketed_speedup", ("floor", 1.0)),
+        ("gates.min_predicted_hier128_speedup", ("floor", 3.0)),
+        ("gates.*", ("rel", 0.01)),
+        ("predicted.*.value", ("rel", 0.01)),
+        ("measured.*.value", ("advisory", 8.0)),
+        ("*", ("ignore",)),
+    ],
+    "BENCH_kernels.json": [
+        ("gates.all_ok", ("equal",)),
+        ("gates.n_kernels", ("floor", 3.0)),      # >= 4 kernels covered
+        ("rows.*.us", ("advisory", 8.0)),
+        ("*", ("ignore",)),
+    ],
+    "BENCH_serve.json": [
+        ("continuous_speedup", ("floor", 1.0)),
+        ("policies.*.requests", ("equal",)),      # seeded workload: exact
+        ("policies.*.output_tokens", ("equal",)),
+        ("policies.*.tokens_per_s", ("advisory", 8.0)),
+        ("policies.*.latency_*", ("advisory", 8.0)),
+        ("policies.*.ttft_*", ("advisory", 8.0)),
+        ("*", ("ignore",)),
+    ],
+}
+
+#: fresh report sections that must be non-empty (a benchmark that silently
+#: skipped its measurement pass must not sail through the gate)
+REQUIRED_PREFIXES = {"BENCH_comm.json": ["measured."]}
+
+
+def flatten(obj, prefix="") -> dict:
+    """Nested dict -> {dotted.path: scalar} over numbers/bools/strings."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = obj
+    return out
+
+
+def rule_for(fname: str, path: str):
+    for pat, rule in RULES[fname]:
+        if fnmatch.fnmatch(path, pat):
+            return rule
+    return ("ignore",)
+
+
+def check_file(fname: str, fresh_dir: Path, base_dir: Path):
+    """Returns (failures, warnings) message lists for one report."""
+    fails, warns = [], []
+    fpath, bpath = fresh_dir / fname, base_dir / fname
+    if not fpath.exists():
+        return [f"{fname}: fresh report missing ({fpath})"], []
+    if not bpath.exists():
+        return [f"{fname}: committed baseline missing ({bpath})"], []
+    fresh = flatten(json.loads(fpath.read_text()))
+    base = flatten(json.loads(bpath.read_text()))
+
+    for prefix in REQUIRED_PREFIXES.get(fname, []):
+        if not any(p.startswith(prefix) for p in fresh):
+            fails.append(f"{fname}: fresh report has no '{prefix}*' "
+                         "metrics — the measurement pass did not run")
+
+    for path in sorted(set(base) | set(fresh)):
+        kind, *arg = rule_for(fname, path)
+        if kind == "ignore":
+            continue
+        f, b = fresh.get(path), base.get(path)
+        tag = f"{fname}: {path}"
+        if f is None:
+            (warns if kind == "advisory" else fails).append(
+                f"{tag} present in baseline but missing from fresh report")
+            continue
+        if kind == "floor":
+            if not (isinstance(f, (int, float)) and f > arg[0]):
+                fails.append(f"{tag} = {f!r} violates hard floor > {arg[0]}")
+            continue
+        if b is None:
+            continue   # new metric: baseline to be regenerated, not a fail
+        if kind == "equal":
+            if f != b:
+                fails.append(f"{tag} = {f!r} != baseline {b!r} (exact)")
+        elif kind == "rel":
+            tol = arg[0]
+            if abs(f - b) > tol * max(abs(b), 1e-12):
+                fails.append(f"{tag} = {f!r} drifted from baseline {b!r} "
+                             f"(> {tol:.0%} relative band)")
+        elif kind == "advisory":
+            r = arg[0]
+            lo, hi = min(abs(b) / r, abs(b) * r), max(abs(b) / r, abs(b) * r)
+            if not (lo <= abs(f) <= hi):
+                warns.append(f"{tag} = {f!r} vs baseline {b!r} outside the "
+                             f"{r}x advisory band (wall-clock; not gating)")
+    return fails, warns
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding the just-regenerated "
+                         "BENCH_*.json reports")
+    ap.add_argument("--baseline-dir",
+                    default=str(Path(__file__).resolve().parent),
+                    help="directory of the committed baselines "
+                         "(default: benchmarks/)")
+    ap.add_argument("--files", nargs="*", default=sorted(RULES),
+                    help="which reports to compare (default: all known)")
+    args = ap.parse_args(argv)
+
+    fresh_dir, base_dir = Path(args.fresh_dir), Path(args.baseline_dir)
+    all_fails, all_warns = [], []
+    for fname in args.files:
+        if fname not in RULES:
+            ap.error(f"no rule table for {fname!r} (known: {sorted(RULES)})")
+        fails, warns = check_file(fname, fresh_dir, base_dir)
+        all_fails += fails
+        all_warns += warns
+        n_checked = sum(1 for p in flatten(
+            json.loads((base_dir / fname).read_text()))
+            if rule_for(fname, p)[0] != "ignore") \
+            if (base_dir / fname).exists() else 0
+        print(f"[check_regression] {fname}: {n_checked} baselined metrics, "
+              f"{len(fails)} regressions, {len(warns)} advisories")
+    for w in all_warns:
+        print(f"[check_regression] WARN  {w}")
+    for f in all_fails:
+        print(f"[check_regression] FAIL  {f}")
+    if all_fails:
+        print(f"[check_regression] REGRESSION: {len(all_fails)} failure(s)")
+        return 1
+    print("[check_regression] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

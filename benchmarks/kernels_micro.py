@@ -121,6 +121,7 @@ def main(argv=None):
         rep = report(all_rows)
         out = args.out if os.path.isabs(args.out) else os.path.join(
             os.path.dirname(os.path.abspath(__file__)), args.out)
+        os.makedirs(os.path.dirname(out), exist_ok=True)
         with open(out, "w") as f:
             json.dump(rep, f, indent=2)
             f.write("\n")

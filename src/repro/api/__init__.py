@@ -42,4 +42,5 @@ from repro.api.spec import (  # noqa: F401
     ModeCaps,
     RunSpec,
     ServeSpec,
+    TelemetrySpec,
 )

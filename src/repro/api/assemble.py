@@ -10,6 +10,11 @@ Resolution order:
 3. mesh from the ``MeshSpec`` topology (none for ``serial``), params
    initialized and placed by the logical-axis sharding rules;
 4. parallelism mode -> update path: plain ``optimizer.update`` (serial/dp),
+   with ``comm="auto"`` resolved FIRST — the telemetry autotuner times the
+   real per-bucket collectives on the live mesh and picks bucket size /
+   backend from the §3.2 balance model with measured constants
+   (``repro.telemetry.autotune``; it must run before ``init_fn`` because
+   the ZeRO-1 strip layout depends on the bucket plan) — then
    the explicit bucketed §3.4 phase pipeline of ``repro.comm`` +
    ``optim.dist.UpdatePlan`` (``zero1`` — monolithic reduce/apply/broadcast,
    or the §3.1 backprop-overlapped bubble schedule when
@@ -24,8 +29,9 @@ Resolution order:
    grads -> update into the jit-ready step the returned
    :class:`~repro.api.run.Run` carries.
 
-ROADMAP follow-ons (bucket autotuning, async modes, multi-backend
-collectives) plug in at step 4 without touching any launcher.
+ROADMAP follow-ons (async modes, multi-backend collectives) plug in at
+step 4 without touching any launcher — the bucket-autotuning hook already
+does (``comm="auto"``).
 """
 from __future__ import annotations
 
@@ -37,7 +43,7 @@ from jax.sharding import Mesh
 from repro.api.families import FamilyAdapter, adapter_for
 from repro.api.run import Run
 from repro.api.serve import Server
-from repro.api.spec import RunSpec, ServeSpec
+from repro.api.spec import MODE_CAPS, RunSpec, ServeSpec
 from repro.comm.bucketer import CommConfig
 from repro.configs import get_config, smoke_variant
 from repro.core.params import Spec
@@ -49,6 +55,7 @@ from repro.optim.dist import (
     make_overlapped_update,
     make_stale_sync_update,
 )
+from repro.telemetry import autotune_comm, make_recorder
 from repro.train import make_overlapped_train_step, make_train_step, zero1_state_shardings
 
 
@@ -101,6 +108,7 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
     """
     cfg = _resolve_config(spec)
     family = adapter_for(cfg)
+    telemetry = make_recorder(spec.telemetry)
 
     mesh = None
     if spec.parallel != "serial":
@@ -128,15 +136,26 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
     comm = None
     if spec.parallel in ("zero1", "stale-sync", "gossip"):
         axes = _data_axes(mesh)
-        if spec.comm is not None:
-            comm = spec.comm
-        elif spec.parallel == "gossip":
+        if spec.parallel == "gossip":
             # flat on purpose: hierarchical would scope the partner
             # rotation to each pod (and the in-pod group of a 1-pod-per-
             # host cluster is a single member — full sync, no gossip)
-            comm = CommConfig(backend="gossip", hierarchical=False)
+            default = CommConfig(backend="gossip", hierarchical=False)
         else:
-            comm = CommConfig(hierarchical=len(axes) == 2)
+            default = CommConfig(hierarchical=len(axes) == 2)
+        if spec.comm == "auto":
+            # measured-feedback autotune — BEFORE init_fn: the ZeRO-1
+            # strip layout depends on the bucket plan and
+            # checkpoint.replan refuses mid-run bucket changes
+            reps = getattr(spec.telemetry, "autotune_reps", 2)
+            with telemetry.span("autotune", mode=spec.parallel):
+                comm = autotune_comm(
+                    params, mesh, axes, default, recorder=telemetry,
+                    backends=MODE_CAPS[spec.parallel].backends, reps=reps)
+        elif spec.comm is not None:
+            comm = spec.comm
+        else:
+            comm = default
         if spec.parallel == "stale-sync":
             init_fn, dist_update = make_stale_sync_update(
                 optimizer, mesh, data_axes=axes, comm=comm)
@@ -179,16 +198,20 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
     return Run(spec=spec, cfg=cfg, family=family, mesh=mesh, rules=rules,
                ctx=ctx, loss_fn=loss_fn, optimizer=optimizer,
                lr_schedule=lr_schedule, train_step=train_step,
-               params=params, opt_state=opt_state, comm=comm)
+               params=params, opt_state=opt_state, comm=comm,
+               telemetry=telemetry)
 
 
 def compile_serve(spec: ServeSpec, params=None,
-                  rules: Optional[ShardingRules] = None) -> Server:
+                  rules: Optional[ShardingRules] = None,
+                  recorder=None) -> Server:
     """Assemble a live :class:`~repro.api.serve.Server` from a declarative
     ``spec`` (the serving twin of ``compile_run``).
 
     ``params`` lets a caller serve trained weights (e.g. ``run.params``
     after training); ``None`` initializes fresh ones from ``spec.seed``.
+    ``recorder`` attaches a telemetry Recorder — prefill/decode/preempt
+    become spans; latency histograms are always on regardless.
     Paged decode covers the attention block kinds only, so non-transformer
     families, modality frontends, M-RoPE, and codebook heads are rejected
     here — before any buffer is allocated.
@@ -217,4 +240,5 @@ def compile_serve(spec: ServeSpec, params=None,
     ctx = ShardingCtx(None, rules if rules is not None else ShardingRules())
     if params is None:
         params = transformer.init_params(cfg, jax.random.PRNGKey(spec.seed))
-    return Server(spec=spec, cfg=cfg, ctx=ctx, params=params)
+    return Server(spec=spec, cfg=cfg, ctx=ctx, params=params,
+                  recorder=recorder)

@@ -44,6 +44,13 @@ class Run:
     #                                 bucketed run (zero1/stale-sync/gossip;
     #                                 None for other modes) — needed to
     #                                 re-plan strip state across world sizes
+    telemetry: Optional[Any] = None  # the run's telemetry Recorder
+    #                                 (repro.telemetry): trainer phases are
+    #                                 spans, listeners (cluster heartbeat,
+    #                                 sinks) ride its events; ``close``
+    #                                 finalizes it and exports the Chrome
+    #                                 trace when the spec set a trace_dir.
+    #                                 None (hand-built Runs) = no-op.
     _data: Optional[Prefetcher] = field(default=None, repr=False)
     _jit_step: Optional[Callable] = field(default=None, repr=False)
     _warm: bool = field(default=False, repr=False)  # jit_step executed once
@@ -185,8 +192,7 @@ class Run:
             {"params": self.params, "opt_state": self.opt_state}, trees)
         self.params, self.opt_state = placed["params"], placed["opt_state"]
 
-    def fit(self, start_step: Optional[int] = None, log_fn=print,
-            on_step: Optional[Callable] = None):
+    def fit(self, start_step: Optional[int] = None, log_fn=print):
         """Train for ``spec.steps`` steps; returns the metrics history.
 
         ``start_step=None`` (the default) resumes from the latest checkpoint
@@ -194,9 +200,10 @@ class Run:
         restored onto the run's shardings and the (deterministic, seeded)
         data stream is fast-forwarded one batch per completed step so the
         trajectory continues exactly where the interrupted run left off.
-        Pass ``start_step=0`` to force a fresh run.  ``on_step`` is called
-        with (step+1) after every dispatched step — the cluster launcher's
-        heartbeat hook."""
+        Pass ``start_step=0`` to force a fresh run.  Per-step hooks attach
+        to ``run.telemetry`` (``add_listener``) — every trainer phase is an
+        event; the cluster launcher's heartbeat listens for the "step"
+        span, which replaced the old bare ``on_step`` callback."""
         s = self.spec
         if start_step is None:
             start_step = 0
@@ -210,8 +217,11 @@ class Run:
                     if latest < s.steps:
                         # re-align the data stream: drop any cached
                         # (already advanced) prefetcher and rebuild with
-                        # one host-side skip per completed step
-                        self.close()
+                        # one host-side skip per completed step.  Close the
+                        # prefetcher directly — ``self.close()`` would also
+                        # finalize the telemetry recorder mid-fit.
+                        if self._data is not None:
+                            self._data.close()
                         self._data = self._make_data(skip=latest)
         if start_step >= s.steps:
             # nothing to train (checkpoint at or past --steps): don't spin
@@ -219,7 +229,8 @@ class Run:
             return []
         tcfg = TrainerConfig(total_steps=s.steps, log_every=s.log_every,
                              ckpt_every=s.ckpt_every, ckpt_dir=s.ckpt_dir,
-                             ckpt_meta=self._ckpt_meta(), on_step=on_step)
+                             ckpt_meta=self._ckpt_meta(),
+                             recorder=self.telemetry)
         trainer = Trainer(self.jit_step, tcfg, jit=False, warm=self._warm)
         with self._mesh_scope():
             self.params, self.opt_state, history = trainer.fit(
@@ -236,6 +247,17 @@ class Run:
         if self._data is not None:
             self._data.close()
             self._data = None
+        rec = self.telemetry
+        if rec is not None and getattr(rec, "enabled", False):
+            rec.close()
+            if rec.trace_dir:
+                # single-process runs merge their own Chrome trace; cluster
+                # workers leave the merge to the supervisor, which sees every
+                # process's trace_p*.jsonl
+                from repro.cluster.spec import in_worker
+                if not in_worker():
+                    from repro.telemetry import merge_process_traces
+                    merge_process_traces(rec.trace_dir)
 
     def __enter__(self) -> "Run":
         return self

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 from repro.core.sharding import ShardingCtx
 from repro.models import layers, transformer
 from repro.serve.kvcache import PagedKVCache
+from repro.telemetry.events import NULL_RECORDER
+from repro.telemetry.metrics import Histogram
 
 
 def _sample(logits: jax.Array, temperature: float, key: jax.Array):
@@ -88,11 +90,16 @@ class Server:
     ``repro.api.assemble.compile_serve``; not meant to be constructed by
     hand."""
 
-    def __init__(self, spec: Any, cfg: Any, ctx: ShardingCtx, params: Any):
+    def __init__(self, spec: Any, cfg: Any, ctx: ShardingCtx, params: Any,
+                 recorder: Any = None):
         self.spec = spec
         self.cfg = cfg
         self.ctx = ctx
         self.params = params
+        self.telemetry = recorder if recorder is not None else NULL_RECORDER
+        # per-request latency histograms, always live (cheap appends):
+        # TTFT = submit -> first sampled token, e2e = submit -> finish
+        self._lat = {"ttft": Histogram(), "e2e": Histogram()}
 
         B = spec.max_batch
         n = spec.pages_per_request
@@ -237,11 +244,12 @@ class Server:
             return completed
         self._ensure_pages()
         active = [(b, r) for b, r in enumerate(self._slots) if r is not None]
-        tok, self._pools = self.decode_jit(
-            self.params, jnp.asarray(self._last_tok[:, None]),
-            jnp.asarray(self._lengths), jnp.asarray(self._pt),
-            self._pools, self._split())
-        tok = np.asarray(tok)
+        with self.telemetry.span("decode", active=len(active)):
+            tok, self._pools = self.decode_jit(
+                self.params, jnp.asarray(self._last_tok[:, None]),
+                jnp.asarray(self._lengths), jnp.asarray(self._pt),
+                self._pools, self._split())
+            tok = np.asarray(tok)
         self.stats["steps"] += 1
         self.stats["decode_tokens"] += len(active)
         for b, req in active:
@@ -298,9 +306,11 @@ class Server:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :L] = req.prompt
         row = self.alloc.page_row(req.rid, self.spec.pages_per_request)
-        tok, self._pools = self._prefill_jit(bucket)(
-            self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32),
-            jnp.asarray(row), self._pools, self._split())
+        with self.telemetry.span("prefill", rid=req.rid, tokens=L,
+                                 bucket=bucket):
+            tok, self._pools = self._prefill_jit(bucket)(
+                self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32),
+                jnp.asarray(row), self._pools, self._split())
         req.admit_seq = self._admit_seq
         self._admit_seq += 1
         req.tokens = [int(tok)]
@@ -343,13 +353,37 @@ class Server:
         self._clear_slot(slot)
         self._queue.appendleft(req)
         self.stats["preemptions"] += 1
+        self.telemetry.event("preempt", rid=req.rid,
+                             preemptions=req.preemptions)
 
     def _finish(self, slot: int, req: Request, completed: List[Request]):
         req.finish_t = time.perf_counter()
         self.alloc.free(req.rid)
         self._clear_slot(slot)
         self.stats["completed"] += 1
+        # observed at finish (not at first token) so a preempted-and-
+        # restarted request contributes exactly one TTFT sample — that of
+        # its successful run
+        if req.first_token_t is not None:
+            self._lat["ttft"].observe(req.first_token_t - req.submit_t)
+        self._lat["e2e"].observe(req.finish_t - req.submit_t)
         completed.append(req)
+
+    def latency_stats(self) -> Dict[str, Optional[float]]:
+        """Per-request latency aggregates over every request finished since
+        the last ``reset_latency_stats``: TTFT (submit -> first token) and
+        end-to-end p50/p99 in seconds, plus the sample count.  ``None``
+        percentiles when nothing has finished."""
+        ttft, e2e = self._lat["ttft"], self._lat["e2e"]
+        return {"n": e2e.count,
+                "ttft_p50_s": ttft.percentile(50),
+                "ttft_p99_s": ttft.percentile(99),
+                "e2e_p50_s": e2e.percentile(50),
+                "e2e_p99_s": e2e.percentile(99)}
+
+    def reset_latency_stats(self):
+        """Drop accumulated latency samples (e.g. after a warmup drain)."""
+        self._lat = {"ttft": Histogram(), "e2e": Histogram()}
 
     def _clear_slot(self, slot: int):
         self._slots[slot] = None

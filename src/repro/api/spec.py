@@ -83,6 +83,28 @@ PARALLEL_MODES = tuple(MODE_CAPS)
 OPTIMIZERS = ("adamw", "sgd")
 SCHEDULES = ("warmup_cosine", "constant", "linear-scale-warmup")
 
+
+@dataclass(frozen=True)
+class TelemetrySpec:
+    """Telemetry knobs of a run (``RunSpec.telemetry``).
+
+    trace_dir:       write per-process JSONL event files here (one
+                     ``trace_p<i>.jsonl`` per cluster process) and export a
+                     merged Chrome trace ``trace.json`` at ``Run.close``
+                     (supervisor-side for cluster runs).  ``None`` keeps
+                     telemetry in-memory only — events still fire (the
+                     cluster heartbeat rides them) but nothing hits disk.
+    autotune_reps:   timed repetitions per probe buffer when
+                     ``RunSpec.comm="auto"`` measures the collectives.
+    """
+    trace_dir: Optional[str] = None
+    autotune_reps: int = 2
+
+    def __post_init__(self):
+        if self.autotune_reps < 1:
+            raise ValueError(
+                f"autotune_reps must be >= 1, got {self.autotune_reps}")
+
 SCHEDULER_POLICIES = ("static", "continuous")
 PAGED_ATTN_IMPLS = ("gather", "pallas")
 
@@ -133,14 +155,21 @@ class RunSpec:
                 (``MODE_CAPS[mode].comm``); ``None`` picks the mode's
                 default ``CommConfig`` (hierarchical iff the mesh has a
                 pod axis; flat + gossip backend for ``parallel="gossip"``).
+                The string ``"auto"`` closes the §3.2 loop instead: at
+                assembly time the real per-bucket collectives are timed on
+                the run's mesh and the bucket size / backend come from
+                ``core.balance.optimal_bucket_bytes`` with the MEASURED
+                latency/bandwidth (``repro.telemetry.autotune``).
     optimizer:  ``"adamw"`` / ``"sgd"``; ``None`` = family default (momentum
                 SGD for the paper's CNN/DNN workloads, AdamW otherwise).
+    telemetry:  :class:`TelemetrySpec` (or a plain trace-dir string, coerced)
+                — ``None`` = in-memory telemetry only, no trace files.
     """
     arch: Union[str, Any]
     smoke: bool = False
     parallel: str = "serial"
     mesh: MeshSpec = field(default_factory=MeshSpec)
-    comm: Optional[CommConfig] = None
+    comm: Union[CommConfig, str, None] = None
     # optimizer + schedule
     optimizer: Optional[str] = None
     lr: float = 1e-3
@@ -157,6 +186,7 @@ class RunSpec:
     log_every: int = 5
     ckpt_every: int = 0                    # 0 = disabled
     ckpt_dir: Optional[str] = None
+    telemetry: Union[TelemetrySpec, str, None] = None
 
     def __post_init__(self):
         if self.parallel not in PARALLEL_MODES:
@@ -171,7 +201,27 @@ class RunSpec:
         if self.steps < 1:
             raise ValueError(f"steps must be >= 1, got {self.steps}")
         caps = MODE_CAPS[self.parallel]
-        if self.comm is not None:
+        if isinstance(self.telemetry, str):
+            # a bare trace-dir string is the common hand-written case
+            object.__setattr__(self, "telemetry",
+                               TelemetrySpec(trace_dir=self.telemetry))
+        elif self.telemetry is not None and not isinstance(self.telemetry,
+                                                           TelemetrySpec):
+            raise ValueError(
+                "telemetry must be a TelemetrySpec, a trace-dir string or "
+                f"None, got {type(self.telemetry).__name__}")
+        if isinstance(self.comm, str):
+            if self.comm != "auto":
+                raise ValueError(
+                    f"comm accepts a CommConfig, None, or the string "
+                    f"'auto', got {self.comm!r}")
+            if not caps.comm:
+                commful = tuple(m for m, c in MODE_CAPS.items() if c.comm)
+                raise ValueError(
+                    "comm='auto' measures the explicit bucketed collectives "
+                    f"— only the comm-capable modes {commful} run them; "
+                    f"parallel={self.parallel!r} does not")
+        elif self.comm is not None:
             if not caps.comm:
                 commful = tuple(m for m, c in MODE_CAPS.items() if c.comm)
                 raise ValueError(

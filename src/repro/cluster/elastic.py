@@ -70,18 +70,15 @@ def _failure(handles: Sequence[WorkerHandle], spawned_at: float,
         return {"dead": dead, "reason": "exit"}
     # heartbeat fallback: every process alive, but someone stopped making
     # progress (wedged in a collective whose peer is gone, deadlock, ...).
-    # Staleness is measured from the later of spawn and last beat so slow
-    # jit warm-up before the first step doesn't count as a hang.
+    # WorkerHandle.staleness tracks payload-content change on the
+    # supervisor's own monotonic clock (NTP-immune; measured from spawn
+    # until the first beat so jit warm-up doesn't count as a hang).
     now = time.monotonic()
-    wall_off = time.time() - now   # hb files carry wall-clock mtimes
     stale = []
     for h in handles:
         if not h.alive():   # clean exit (returncode 0): not a beat source
             continue
-        hb = h.heartbeat()
-        last = spawned_at if hb is None else max(spawned_at,
-                                                 hb[0] - wall_off)
-        if now - last > heartbeat_timeout:
+        if h.staleness(now, spawned_at) > heartbeat_timeout:
             stale.append(h.process_id)
     if stale and len(stale) == sum(h.alive() for h in handles):
         # only declare a hang when the WHOLE live group is stale —
@@ -118,9 +115,9 @@ def run_elastic(worker_argv: Sequence[str], run_dir: str,
                 if chaos_armed:
                     target = handles[min(chaos.worker, world - 1)]
                     hb = target.heartbeat()
-                    if hb is not None and hb[1] >= chaos.at_step:
+                    if hb is not None and hb.step >= chaos.at_step:
                         log(f"[elastic] chaos: SIGKILL worker "
-                            f"{target.process_id} at step {hb[1]}")
+                            f"{target.process_id} at step {hb.step}")
                         sigkill(target)
                         chaos_armed = False
                 if all(not h.alive() and h.proc.returncode == 0

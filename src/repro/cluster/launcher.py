@@ -12,12 +12,23 @@ Liveness is tracked two ways, consumed by ``cluster.elastic``:
 
   * the OS process itself (``Popen.poll`` — a crash or a SIGKILL chaos
     injection is detected within one poll interval);
-  * a per-worker heartbeat file the training loop touches every step
-    (``Run.fit(on_step=...)``), which catches the nastier failure mode of
-    a worker that is alive but wedged in a collective whose peer died.
+  * a per-worker heartbeat file, written by a telemetry listener riding the
+    training loop's "step" span (``make_heartbeat_listener`` attached to
+    ``run.telemetry``), which catches the nastier failure mode of a worker
+    that is alive but wedged in a collective whose peer died.
+
+The heartbeat payload is JSON ``{"step": n, "mono": t}`` carrying the
+worker's OWN monotonic timestamp alongside the step.  The supervisor never
+compares that timestamp to its own clock (monotonic clocks aren't shared
+across processes); it tracks when the payload CONTENT last changed against
+its own monotonic clock (``WorkerHandle.staleness``), so an NTP wall-clock
+jump on the host can neither false-trigger nor mask a staleness timeout.
+Legacy plain-int heartbeat files still parse (step only) and fall back to
+the old mtime comparison.
 """
 from __future__ import annotations
 
+import json
 import os
 import signal
 import socket
@@ -25,12 +36,67 @@ import subprocess
 import sys
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Callable, List, NamedTuple, Optional, Sequence
 
 from repro.cluster.spec import ClusterSpec
 
 ENV_HEARTBEAT_FILE = "REPRO_HEARTBEAT_FILE"
 ENV_RESULT_FILE = "REPRO_RESULT_FILE"
+
+
+class Heartbeat(NamedTuple):
+    """One parsed heartbeat: last completed step, the worker's own monotonic
+    timestamp (None for legacy plain-int files), and the file mtime (the
+    legacy fallback liveness signal)."""
+    step: int
+    mono: Optional[float]
+    mtime: float
+
+
+def write_heartbeat(path: str, step: int, mono: float) -> None:
+    """Atomically publish a heartbeat (tmp + rename — a reader never sees a
+    half-written payload)."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(json.dumps({"step": step, "mono": mono}))
+    os.replace(tmp, path)
+
+
+def parse_heartbeat(path: str) -> Optional[Heartbeat]:
+    """Read ``path`` as a :class:`Heartbeat`; None before the first beat.
+    Accepts both the JSON payload and the legacy bare-int format."""
+    try:
+        with open(path) as f:
+            txt = f.read().strip()
+        mtime = os.path.getmtime(path)
+    except OSError:
+        return None
+    try:
+        d = json.loads(txt or "0")
+    except ValueError:
+        return None
+    if isinstance(d, dict):
+        try:
+            return Heartbeat(int(d["step"]), float(d["mono"]), mtime)
+        except (KeyError, TypeError, ValueError):
+            return None
+    if isinstance(d, (int, float)):
+        return Heartbeat(int(d), None, mtime)
+    return None
+
+
+def make_heartbeat_listener(path: str) -> Callable[[dict], None]:
+    """A telemetry listener that beats ``path`` on every completed "step"
+    span — attach to ``run.telemetry.add_listener``.  The beat carries the
+    span's end timestamp (``t1``, the worker's monotonic clock) and step."""
+    def listener(ev: dict) -> None:
+        if ev.get("kind") == "step" and ev.get("ph") == "span":
+            try:
+                write_heartbeat(path, int(ev.get("step", 0)),
+                                float(ev["t1"]))
+            except OSError:
+                pass   # a failed beat must never kill the training step
+    return listener
 
 
 def free_port() -> int:
@@ -47,16 +113,36 @@ class WorkerHandle:
     process_id: int
     hb_file: str
     log_file: Optional[str]
+    _seen_beat: Optional[tuple] = None   # last observed (step, mono) payload
+    _seen_at: Optional[float] = None     # SUPERVISOR monotonic time of that
+    #                                      observation — staleness compares
+    #                                      like-with-like on one clock
 
-    def heartbeat(self) -> Optional[tuple]:
-        """(mtime, last completed step) of the worker's heartbeat, or None
-        before the first beat."""
-        try:
-            with open(self.hb_file) as f:
-                txt = f.read().strip()
-            return os.path.getmtime(self.hb_file), int(txt or "0")
-        except (OSError, ValueError):
-            return None
+    def heartbeat(self) -> Optional[Heartbeat]:
+        """The worker's last published :class:`Heartbeat`, or None before
+        the first beat."""
+        return parse_heartbeat(self.hb_file)
+
+    def staleness(self, now: float, spawned_at: float) -> float:
+        """Seconds since this worker last demonstrably made progress, as of
+        supervisor-monotonic ``now``.  New-format beats are judged by when
+        their (step, mono) payload last CHANGED on the supervisor's own
+        clock — immune to NTP wall-clock jumps on either side.  Legacy
+        bare-int files fall back to the mtime comparison (wall clock
+        offset-corrected).  Never negative; measured from ``spawned_at``
+        until the first beat so jit warm-up doesn't count as a hang."""
+        hb = self.heartbeat()
+        if hb is None:
+            return max(0.0, now - spawned_at)
+        if hb.mono is not None:
+            beat = (hb.step, hb.mono)
+            if beat != self._seen_beat:
+                self._seen_beat = beat
+                self._seen_at = now
+            return max(0.0, now - max(spawned_at, self._seen_at))
+        # legacy path: hb files carry wall-clock mtimes
+        wall_off = time.time() - now
+        return max(0.0, now - max(spawned_at, hb.mtime - wall_off))
 
     def alive(self) -> bool:
         return self.proc.poll() is None

@@ -36,23 +36,17 @@ import os
 import sys
 import tempfile
 
-from repro.cluster.launcher import ENV_HEARTBEAT_FILE, ENV_RESULT_FILE
+from repro.cluster.launcher import (
+    ENV_HEARTBEAT_FILE,
+    ENV_RESULT_FILE,
+    make_heartbeat_listener,
+)
 from repro.cluster.spec import ClusterSpec, in_worker, initialize
 
 # |cluster loss - single loss| tolerance for --verify: the update is
 # G-invariant in exact arithmetic; fp32 reduction-order noise over a few
 # smoke steps stays orders of magnitude below this
 VERIFY_TOL = 5e-3
-
-
-def _heartbeat_fn(path):
-    def beat(step: int) -> None:
-        tmp = f"{path}.tmp"
-        with open(tmp, "w") as f:
-            f.write(str(step))
-        os.replace(tmp, path)   # atomic: the supervisor never reads a torn
-        #                         write as a stale heartbeat
-    return beat
 
 
 def worker_main(args) -> int:
@@ -72,7 +66,12 @@ def worker_main(args) -> int:
               f"mesh={dict(run.mesh.shape) if run.mesh is not None else None}"
               f"  parallel={run.spec.parallel}")
     hb = os.environ.get(ENV_HEARTBEAT_FILE)
-    hist = run.fit(on_step=_heartbeat_fn(hb) if hb else None)
+    if hb:
+        # the heartbeat rides the telemetry "step" span (the general event
+        # hook that replaced the bare on_step callback); compile_run always
+        # builds a live recorder, so this works with or without --trace-dir
+        run.telemetry.add_listener(make_heartbeat_listener(hb))
+    hist = run.fit()
     run.close()
     if jax.process_index() == 0:
         final = hist[-1]["loss"] if hist else None
@@ -95,7 +94,10 @@ def _verify_single(args) -> float:
 
     import dataclasses
     spec = spec_from_args(args, cluster=False)
-    spec = dataclasses.replace(spec, ckpt_dir=None, ckpt_every=0)
+    # telemetry stripped: the supervisor has no REPRO_PROCESS_ID, so its
+    # trace_p0.jsonl would collide with worker 0's
+    spec = dataclasses.replace(spec, ckpt_dir=None, ckpt_every=0,
+                               telemetry=None)
     run = compile_run(spec)
     hist = run.fit(start_step=0)
     run.close()
@@ -153,6 +155,13 @@ def main(argv=None) -> int:
     final = res.result.get("final_loss") if res.result else None
     print(f"[cluster] done: world={res.final_world} "
           f"attempts={res.attempts} final_loss={final}")
+    if args.trace_dir:
+        # workers each wrote trace_p<pid>.jsonl (Run.close skips the merge
+        # in workers); the supervisor sees them all and merges here
+        from repro.telemetry import merge_process_traces
+        merged = merge_process_traces(args.trace_dir)
+        if merged:
+            print(f"[cluster] merged Chrome trace: {merged}")
     if args.verify:
         if final is None:
             print("[cluster] verify FAILED: no final loss reported")

@@ -55,7 +55,11 @@ def comm_flags_set(args) -> bool:
 
 def spec_from_args(args, cluster: bool = False) -> RunSpec:
     comm = None
-    if comm_flags_set(args):
+    if getattr(args, "comm", None) == "auto":
+        # measured-feedback autotune: compile_run times the real per-bucket
+        # collectives and picks bucket size/backend (repro.telemetry.autotune)
+        comm = "auto"
+    elif comm_flags_set(args):
         caps = MODE_CAPS[args.parallel]
         bucket_mb = 4.0 if args.bucket_mb is None else args.bucket_mb
         # the argparse default "lax" means "the mode's default backend" —
@@ -84,7 +88,8 @@ def spec_from_args(args, cluster: bool = False) -> RunSpec:
         comm=comm, optimizer=args.optimizer, lr=args.lr,
         schedule=args.schedule,
         steps=args.steps, batch=args.batch, seq=args.seq, seed=args.seed,
-        log_every=5, ckpt_every=ckpt_every, ckpt_dir=args.ckpt_dir)
+        log_every=5, ckpt_every=ckpt_every, ckpt_dir=args.ckpt_dir,
+        telemetry=getattr(args, "trace_dir", None))
 
 
 def add_run_args(ap: argparse.ArgumentParser, parallel_default: str = "dp"):
@@ -133,6 +138,15 @@ def add_run_args(ap: argparse.ArgumentParser, parallel_default: str = "dp"):
                     help="collective implementation for the CROSS-POD hop "
                          "of the hierarchical schedule (default lax — the "
                          "right tool on the slow inter-pod/cross-host link)")
+    ap.add_argument("--comm", default=None, choices=["auto"],
+                    help="comm='auto': measure the real per-bucket "
+                         "collectives at assembly time and autotune bucket "
+                         "size + backend from the §3.2 balance model "
+                         "(replaces the explicit comm flags)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write a per-process telemetry trace (JSONL) and a "
+                         "merged Chrome trace (trace.json, load in "
+                         "chrome://tracing or Perfetto) to this directory")
     ap.add_argument("--optimizer", default=None,
                     choices=["adamw", "sgd"],
                     help="default: family choice (momentum SGD for the "
@@ -150,6 +164,17 @@ def check_run_args(ap: argparse.ArgumentParser, args) -> None:
     the same source ``RunSpec`` validates against, so the launcher and the
     API can never disagree on what a mode supports."""
     caps = MODE_CAPS[args.parallel]
+    if getattr(args, "comm", None) == "auto":
+        if comm_flags_set(args):
+            ap.error("--comm auto autotunes the bucket size and backend "
+                     "from measurement; it cannot be combined with the "
+                     "explicit comm flags (--bucket-mb / --wire-dtype / "
+                     "--overlap / --comm-backend / --cross-backend)")
+        if not caps.comm:
+            commful = [m for m, c in MODE_CAPS.items() if c.comm]
+            ap.error("--comm auto measures the explicit bucketed "
+                     f"collectives, which --parallel {args.parallel} does "
+                     f"not use; pick one of {commful}")
     if comm_flags_set(args) and not caps.comm:
         commful = [m for m, c in MODE_CAPS.items() if c.comm]
         ap.error("--bucket-mb / --wire-dtype / --overlap / --comm-backend "
@@ -175,10 +200,12 @@ def main(argv=None):
     check_run_args(ap, args)
 
     run = compile_run(spec_from_args(args))
+    # report the RESOLVED comm plan (run.comm), not spec.comm — the spec may
+    # say the string "auto", the run carries what the autotuner picked
     print(f"arch: {run.cfg.name}  family={run.family.family}  "
           f"parallel={run.spec.parallel}  "
-          f"overlap={run.spec.comm.overlap if run.spec.comm else False}  "
-          f"backend={run.spec.comm.backend if run.spec.comm else 'lax'}  "
+          f"overlap={run.comm.overlap if run.comm else False}  "
+          f"backend={run.comm.backend if run.comm else 'lax'}  "
           f"mesh={dict(run.mesh.shape) if run.mesh is not None else None}")
     hist = run.fit()   # auto-resumes from the latest --ckpt-dir checkpoint
     run.close()

@@ -8,11 +8,12 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, Optional
+from typing import Any, Callable, Iterable, Optional
 
 import jax
 
 from repro.checkpoint import ckpt as ckpt_lib
+from repro.telemetry.events import NULL_RECORDER
 
 
 def _batch_items(batch) -> tuple:
@@ -43,9 +44,15 @@ class TrainerConfig:
     #                                    (zero1 world layout for elastic
     #                                    world-size replan — see
     #                                    checkpoint.replan)
-    on_step: Optional[Callable] = None  # called with (step+1) after every
-    #                                     dispatched step — the cluster
-    #                                     launcher's heartbeat hook
+    recorder: Optional[Any] = None     # telemetry Recorder; every phase of
+    #                                    the loop becomes a span (step,
+    #                                    data_wait, compile, ckpt_write) and
+    #                                    listeners see each completed event
+    #                                    — the general hook that replaced
+    #                                    the bare on_step heartbeat callback
+    #                                    (the cluster heartbeat now rides
+    #                                    the "step" span's end event).
+    #                                    None = NULL_RECORDER (no-op).
 
 
 @dataclass
@@ -63,12 +70,16 @@ class Trainer:
         history = []
         step_fn = jax.jit(self.train_step, donate_argnums=(0, 1)) \
             if self.jit else self.train_step
+        rec = self.cfg.recorder if self.cfg.recorder is not None \
+            else NULL_RECORDER
+        sync = getattr(rec, "sync", False)
         t0 = time.perf_counter()
         t_compile = 0.0
         items_seen, unit = 0, "tok"
         for step in range(start_step, self.cfg.total_steps):
             try:
-                batch = next(data_iter)
+                with rec.span("data_wait", step=step + 1):
+                    batch = next(data_iter)
             except StopIteration:
                 # finite source ran dry (Prefetcher signals exhaustion as
                 # StopIteration): end training with the progress made, do
@@ -76,19 +87,28 @@ class Trainer:
                 log_fn(f"data exhausted at step {step} "
                        f"(of {self.cfg.total_steps}); stopping")
                 break
-            params, opt_state, metrics = step_fn(params, opt_state,
-                                                 step, batch)
             first = step == start_step and not self.warm
+            with rec.span("step", step=step + 1):
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     step, batch)
+                if first:
+                    # the first step is dominated by jit compile: block,
+                    # report it separately, and restart the throughput clock
+                    # so items/s measures steady-state steps only
+                    with rec.span("compile", step=step + 1):
+                        jax.block_until_ready(metrics["loss"])
+                elif sync:
+                    # traced runs trade async dispatch for honest span
+                    # durations; untraced runs never block here
+                    jax.block_until_ready(metrics["loss"])
             if first:
-                # the first step is dominated by jit compile: block, report
-                # it separately, and restart the throughput clock so
-                # items/s measures steady-state steps only
-                jax.block_until_ready(metrics["loss"])
                 t_compile = time.perf_counter() - t0
                 t0 = time.perf_counter()
             else:
                 n, unit = _batch_items(batch)
                 items_seen += n
+                rec.count(f"items_{unit}", n)
+            rec.count("steps")
             # the FINAL step always logs, so history[-1] is the true end
             # state (callers label checkpoints / report final loss from it)
             if ((step + 1) % self.cfg.log_every == 0 or step == start_step
@@ -105,9 +125,8 @@ class Trainer:
                                     grad_norm=float(metrics["grad_norm"])))
             if (self.cfg.ckpt_every and self.cfg.ckpt_dir
                     and (step + 1) % self.cfg.ckpt_every == 0):
-                ckpt_lib.save(self.cfg.ckpt_dir, step + 1,
-                              meta=self.cfg.ckpt_meta,
-                              params=params, opt_state=opt_state)
-            if self.cfg.on_step is not None:
-                self.cfg.on_step(step + 1)
+                with rec.span("ckpt_write", step=step + 1):
+                    ckpt_lib.save(self.cfg.ckpt_dir, step + 1,
+                                  meta=self.cfg.ckpt_meta,
+                                  params=params, opt_state=opt_state)
         return params, opt_state, history
