@@ -42,18 +42,20 @@ import textwrap
 
 import jax
 
-from repro.comm.bucketer import plan_buckets
+from repro.comm.bucketer import WIRE_FORMATS, plan_buckets
 from repro.comm.overlap import exposed_comm
 from repro.configs import XEON_E5_2666V3_10GBE as GBE, XEON_E5_2698V3_FDR as FDR, get_config
 from repro.core.balance import (
     SIZE_F32,
     bucketed_allreduce_time,
     collective_count,
+    compressed_allreduce_time,
     conv_comp_flops,
     fc_comp_flops,
     hierarchical_allreduce_time,
     optimal_bucket_bytes,
     ring_collective_time,
+    wire_reduce_bytes,
 )
 
 MIB = 2**20
@@ -64,6 +66,10 @@ G_PODS, G_IN = 8, 16   # two-level composition of 128 nodes
 
 MEASURED_MIB = (0.25, 4.0)
 MEASURED_DEVICES = 8
+MEASURED_FORMATS = ("fp32", "int8", "topk")   # bf16 is a dense dtype cast —
+#                                               shape-identical to fp32 on a
+#                                               host mesh, nothing to measure
+TOPK_RATIO = 0.05
 
 
 def grad_tree(net: str):
@@ -179,6 +185,57 @@ def rows(backend: str = "lax"):
     return out
 
 
+def wire_rows(backend: str = "lax"):
+    """Per wire format (``CommConfig.wire_format``): the format-optimal
+    bucket, the predicted roundtrip at it, the reduce-side bytes on the
+    wire (the broadcast side always stays dense fp32 — weights), and the
+    predicted crossover: the smallest sweep bucket at which the format's
+    roundtrip beats fp32's AT THE SAME BUCKET.  In the §3.2 wire-only model
+    a compressed format wins at every bucket (only the bandwidth term
+    shrinks), so the predicted crossover is the sweep floor — the measured
+    rows record where the quantize/select compute actually pays for itself
+    on a real schedule."""
+    out = []
+    for net in ("vgg-a", "overfeat-fast"):
+        leaves, _ = grad_tree(net)
+        total = sum(_size(lyr) for lyr in leaves) * SIZE_F32
+        n_tensors = len(leaves)
+        for hw, tag in ((FDR, "FDR"), (GBE, "10GbE")):
+            pre = f"comm/{net}/{backend}/{tag}"
+            for fmt in WIRE_FORMATS:
+                b_star = optimal_bucket_bytes(total, G, hw, wire_format=fmt,
+                                              topk_ratio=TOPK_RATIO)
+                plan = plan_buckets(leaves, G, int(b_star))
+                t = compressed_allreduce_time(
+                    total, n_tensors, b_star, G, hw, wire_format=fmt,
+                    topk_ratio=TOPK_RATIO, n_coll=plan.n_collectives,
+                    backend=backend)
+                rbytes = wire_reduce_bytes(total, G, plan.n_collectives,
+                                           fmt, TOPK_RATIO)
+                out.append((f"{pre}/wire_{fmt}_ms", t * 1e3,
+                            f"opt_bucket_MiB={b_star / MIB:.2f};"
+                            f"n_coll={plan.n_collectives}"))
+                out.append((f"{pre}/wire_{fmt}_reduce_MiB", rbytes / MIB,
+                            f"factor_vs_fp32={rbytes / total:.4f}"))
+                cross = -1.0
+                for mib in SWEEP_MIB:
+                    p = plan_buckets(leaves, G, int(mib * MIB))
+                    t_fmt = compressed_allreduce_time(
+                        total, n_tensors, mib * MIB, G, hw, wire_format=fmt,
+                        topk_ratio=TOPK_RATIO, n_coll=p.n_collectives,
+                        backend=backend)
+                    t_fp32 = compressed_allreduce_time(
+                        total, n_tensors, mib * MIB, G, hw,
+                        n_coll=p.n_collectives, backend=backend)
+                    if t_fmt <= t_fp32:
+                        cross = mib
+                        break
+                out.append((f"{pre}/wire_{fmt}_crossover_MiB", cross,
+                            "smallest sweep bucket beating fp32 "
+                            "(predicted; -1 = never)"))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # measured: the real executable schedule on a forced host mesh
 # ---------------------------------------------------------------------------
@@ -199,36 +256,45 @@ _MEASURE_SNIPPET = """
     params = adapter_for(cfg).init(cfg, jax.random.PRNGKey(0))
     flat = tuple(jax.tree.leaves(params))
     mesh = jax.make_mesh((G,), ("data",), axis_types=(AxisType.Auto,))
-    sched = make_schedule("data", backend=BACKEND)
 
-    for mib in {mibs}:
-        plan = plan_buckets(params, G, int(mib * 2**20))
+    for fmt in {fmts}:
+        sched = make_schedule("data", backend=BACKEND, wire_format=fmt)
+        for mib in {mibs}:
+            plan = plan_buckets(params, G, int(mib * 2**20))
 
-        def roundtrip(leaves):
-            bufs = [pack_bucket(leaves, b) for b in plan.buckets]
-            return [sched.broadcast(sched.reduce(buf) / G) for buf in bufs]
+            def roundtrip(leaves):
+                bufs = [pack_bucket(leaves, b) for b in plan.buckets]
+                return [sched.broadcast(sched.reduce(buf) / G)
+                        for buf in bufs]
 
-        specs = jax.tree.map(lambda _: P(), flat)
-        fn = jax.jit(jax.shard_map(roundtrip, mesh=mesh, in_specs=(specs,),
-                                   out_specs=P(), check_vma=False))
-        with jax.set_mesh(mesh):
-            jax.block_until_ready(fn(flat))          # compile
-            best = float("inf")
-            for _ in range(3):
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn(flat))
-                best = min(best, time.perf_counter() - t0)
-        print(f"MEASURED mib={{mib}} ms={{best * 1e3:.4f}} "
-              f"n_coll={{plan.n_collectives}} "
-              f"bytes={{plan.total_padded * 4}}")
+            specs = jax.tree.map(lambda _: P(), flat)
+            fn = jax.jit(jax.shard_map(roundtrip, mesh=mesh,
+                                       in_specs=(specs,),
+                                       out_specs=P(), check_vma=False))
+            with jax.set_mesh(mesh):
+                jax.block_until_ready(fn(flat))          # compile
+                best = float("inf")
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(flat))
+                    best = min(best, time.perf_counter() - t0)
+            print(f"MEASURED fmt={{fmt}} mib={{mib}} ms={{best * 1e3:.4f}} "
+                  f"n_coll={{plan.n_collectives}} "
+                  f"bytes={{plan.total_padded * 4}}")
 """
 
 
 def measured_rows(backend: str = "lax", devices: int = MEASURED_DEVICES):
     """Wall-clock the real ``FlatSchedule(backend)`` bucket round-trip over
     the vgg-a SMOKE tree on ``devices`` forced host devices (subprocess so
-    the forced device count never leaks into the caller), paired with the
-    §3.2 model's prediction for the same plan in the derived column."""
+    the forced device count never leaks into the caller), per wire format,
+    paired with the §3.2 model's prediction for the same plan in the
+    derived column.  Adds per-format measured CROSSOVER rows: the smallest
+    measured bucket where the compressed roundtrip actually beats fp32
+    (-1 = never — on a host mesh the shared-memory 'wire' is nearly free,
+    so the quantize/select compute usually dominates; on real links the
+    bandwidth win flips it, which is exactly what the crossover row
+    tracks)."""
     env = dict(
         os.environ,
         XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
@@ -237,25 +303,39 @@ def measured_rows(backend: str = "lax", devices: int = MEASURED_DEVICES):
                         os.environ.get("PYTHONPATH")) if p))
     code = "import repro.jaxcompat\n" + textwrap.dedent(
         _MEASURE_SNIPPET.format(backend=backend, devices=devices,
-                                mibs=MEASURED_MIB))
+                                mibs=MEASURED_MIB, fmts=MEASURED_FORMATS))
     proc = subprocess.run([sys.executable, "-c", code], env=env,
-                          capture_output=True, text=True, timeout=600)
+                          capture_output=True, text=True, timeout=900)
     if proc.returncode != 0:
         raise RuntimeError(f"measure subprocess failed:\n{proc.stderr[-2000:]}")
     out = []
+    ms_by = {}
     for line in proc.stdout.splitlines():
-        m = re.match(r"MEASURED mib=([\d.]+) ms=([\d.]+) n_coll=(\d+) "
-                     r"bytes=(\d+)", line)
+        m = re.match(r"MEASURED fmt=(\w+) mib=([\d.]+) ms=([\d.]+) "
+                     r"n_coll=(\d+) bytes=(\d+)", line)
         if not m:
             continue
-        mib, ms, n_coll, nbytes = (float(m.group(1)), float(m.group(2)),
-                                   int(m.group(3)), int(m.group(4)))
-        pred = bucketed_allreduce_time(
-            nbytes, n_coll, mib * MIB, devices, FDR, n_coll=n_coll,
-            backend=backend)
-        out.append((f"comm/vgg-a-smoke/{backend}/measured_{mib}MiB_ms", ms,
+        fmt, mib, ms, n_coll, nbytes = (m.group(1), float(m.group(2)),
+                                        float(m.group(3)), int(m.group(4)),
+                                        int(m.group(5)))
+        pred = compressed_allreduce_time(
+            nbytes, n_coll, mib * MIB, devices, FDR, wire_format=fmt,
+            topk_ratio=TOPK_RATIO, n_coll=n_coll, backend=backend)
+        ms_by[(fmt, mib)] = ms
+        out.append((f"comm/vgg-a-smoke/{backend}/measured_{fmt}_{mib}MiB_ms",
+                    ms,
                     f"predicted_FDR_ms={pred * 1e3:.4f};n_coll={n_coll};"
                     f"G={devices}"))
+    for fmt in MEASURED_FORMATS:
+        if fmt == "fp32":
+            continue
+        cross = next((mib for mib in MEASURED_MIB
+                      if (fmt, mib) in ms_by and ("fp32", mib) in ms_by
+                      and ms_by[(fmt, mib)] <= ms_by[("fp32", mib)]), -1.0)
+        out.append((f"comm/vgg-a-smoke/{backend}/measured_crossover_"
+                    f"{fmt}_MiB", float(cross),
+                    "smallest measured bucket beating fp32 (-1 = never; "
+                    "host-mesh wall clock, advisory)"))
     return out
 
 
@@ -272,10 +352,10 @@ def report(backends, measured: bool = True) -> dict:
     reproduce)."""
     out = {"benchmark": "comm_bucket_sweep",
            "predicted": {}, "measured": {}, "gates": {}}
-    speedups, hiers = {}, {}
+    speedups, hiers, reductions = {}, {}, {}
     for backend in backends:
         pred = {}
-        for name, v, derived in rows(backend):
+        for name, v, derived in rows(backend) + wire_rows(backend):
             pred[name] = {"value": v, "derived": derived}
         out["predicted"][backend] = pred
         for net in ("vgg-a", "overfeat-fast"):
@@ -287,6 +367,12 @@ def report(backends, measured: bool = True) -> dict:
             hiers[f"{net}/{backend}"] = (
                 pred[f"{pre}/hier128_flat_ms"]["value"]
                 / pred[f"{pre}/hier128_two_level_ms"]["value"])
+            # the acceptance gate counts REDUCE-side wire bytes at each
+            # format's own optimal bucket (the broadcast side is identical
+            # dense fp32 for every format, so it cancels)
+            reductions[f"{net}/{backend}"] = (
+                pred[f"{pre}/FDR/wire_fp32_reduce_MiB"]["value"]
+                / pred[f"{pre}/FDR/wire_int8_reduce_MiB"]["value"])
         if measured:
             out["measured"][backend] = {
                 name: {"value": v, "derived": derived}
@@ -294,8 +380,10 @@ def report(backends, measured: bool = True) -> dict:
     out["gates"] = {
         "predicted_bucketed_speedup": speedups,
         "predicted_hier128_speedup": hiers,
+        "predicted_int8_bytes_reduction": reductions,
         "min_predicted_bucketed_speedup": min(speedups.values()),
         "min_predicted_hier128_speedup": min(hiers.values()),
+        "min_predicted_int8_bytes_reduction": min(reductions.values()),
     }
     return out
 
@@ -318,7 +406,7 @@ def main(argv=None):
                          "as JSON (CI: benchmarks/BENCH_comm.json)")
     args = ap.parse_args(argv)
     print(f"{'metric':48s} {'value':>12s}  derived")
-    all_rows = rows(args.backend)
+    all_rows = rows(args.backend) + wire_rows(args.backend)
     if not args.no_measured:
         all_rows += measured_rows(args.backend)
     for name, v, derived in all_rows:
@@ -336,7 +424,9 @@ def main(argv=None):
               f"(min bucketed speedup "
               f"{rep['gates']['min_predicted_bucketed_speedup']:.2f}x, "
               f"min hier128 speedup "
-              f"{rep['gates']['min_predicted_hier128_speedup']:.2f}x)")
+              f"{rep['gates']['min_predicted_hier128_speedup']:.2f}x, "
+              f"min int8 bytes reduction "
+              f"{rep['gates']['min_predicted_int8_bytes_reduction']:.2f}x)")
     return all_rows
 
 

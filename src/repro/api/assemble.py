@@ -54,6 +54,7 @@ from repro.optim.dist import (
     make_distributed_update,
     make_overlapped_update,
     make_stale_sync_update,
+    make_topk_ef_update,
 )
 from repro.telemetry import autotune_comm, make_recorder
 from repro.train import make_overlapped_train_step, make_train_step, zero1_state_shardings
@@ -148,16 +149,28 @@ def compile_run(spec: RunSpec, rules: Optional[ShardingRules] = None) -> Run:
             # strip layout depends on the bucket plan and
             # checkpoint.replan refuses mid-run bucket changes
             reps = getattr(spec.telemetry, "autotune_reps", 2)
+            import os as _os
+
+            from repro.telemetry.autotune import ENV_AUTOTUNE_CACHE
             with telemetry.span("autotune", mode=spec.parallel):
                 comm = autotune_comm(
                     params, mesh, axes, default, recorder=telemetry,
-                    backends=MODE_CAPS[spec.parallel].backends, reps=reps)
+                    backends=MODE_CAPS[spec.parallel].backends, reps=reps,
+                    wire_formats=MODE_CAPS[spec.parallel].wire_formats,
+                    cache_path=_os.environ.get(ENV_AUTOTUNE_CACHE))
         elif spec.comm is not None:
             comm = spec.comm
         else:
             comm = default
         if spec.parallel == "stale-sync":
             init_fn, dist_update = make_stale_sync_update(
+                optimizer, mesh, data_axes=axes, comm=comm)
+            opt_state = init_fn(params)
+        elif comm.wire_format == "topk":
+            # spec validation pinned this to the monolithic zero1 pipeline
+            # (no overlap, no stale-sync, no gossip): the error-feedback
+            # residual needs the strip-state carry of the EF composition
+            init_fn, dist_update = make_topk_ef_update(
                 optimizer, mesh, data_axes=axes, comm=comm)
             opt_state = init_fn(params)
         elif comm.overlap:

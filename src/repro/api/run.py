@@ -130,6 +130,18 @@ class Run:
         from repro.checkpoint.replan import replan_strip_state
         from repro.comm.bucketer import plan_buckets
         template = self.opt_state if template is None else template
+        wrap = None
+        if isinstance(template, dict) and set(template) == {"residual",
+                                                            "zero1"}:
+            # topk error-feedback wrapper: the residual is member-LOCAL
+            # unsent gradient mass sized by the OLD world's padded buckets
+            # — old members' mass has no owner in the new world, so there
+            # is no exact conversion.  Replan only the inner strips (the
+            # sub-template keeps the checkpoint's ``opt_state:zero1/...``
+            # key paths) and restart the residual at zero: one step of
+            # stiffer sparsification, the stale-buffer re-init trade.
+            template = {"zero1": template["zero1"]}
+            wrap = self._reinit_residual
         new_world = self._zero1_world()
         old_world = ckpt_lib.read_manifest(
             self.spec.ckpt_dir, step)["meta"].get("zero1")
@@ -145,6 +157,8 @@ class Run:
                             self.comm.bucket_bytes)
         trees["opt_state"] = replan_strip_state(
             template, old_leaves, plan, old_world, new_world)
+        if wrap is not None:
+            trees["opt_state"] = wrap(trees["opt_state"]["zero1"])
         return trees
 
     def _stale_wrapped(self) -> bool:
@@ -163,22 +177,40 @@ class Run:
                 "synced": jnp.zeros((), jnp.int32),
                 "zero1": inner}
 
+    def _ef_wrapped(self) -> bool:
+        """True when this run's opt_state is the topk error-feedback
+        wrapper dict around the inner zero1 strip state."""
+        return (isinstance(self.opt_state, dict)
+                and set(self.opt_state) == {"residual", "zero1"})
+
+    def _reinit_residual(self, inner):
+        """Wrap a restored INNER zero1 strip state for a topk EF run with a
+        zero residual (this world's bucket shapes — the carried mass of a
+        bare or foreign-world checkpoint is unrecoverable; see
+        ``optim.dist.make_topk_ef_update``)."""
+        return {"residual": tuple(jnp.zeros_like(r)
+                                  for r in self.opt_state["residual"]),
+                "zero1": inner}
+
     def restore(self, step: int):
         """Load checkpoint ``step`` from ``spec.ckpt_dir`` and place the
         restored trees back onto this run's shardings (zero1 strip
         opt_state lands on its data-axis strips, not unplaced on device 0).
         A zero1 checkpoint saved at a DIFFERENT world size is re-planned
         (``checkpoint.replan``) instead of rejected — the elastic
-        shrink-and-resume path.  A stale-sync run additionally accepts a
-        BARE zero1 checkpoint (the strip layouts are identical by
-        construction): the inner state restores and the staleness buffer
-        re-initializes, costing one synchronous step on resume."""
+        shrink-and-resume path.  A stale-sync or topk-EF run additionally
+        accepts a BARE zero1 checkpoint (the strip layouts are identical by
+        construction): the inner state restores and the wrapper buffer
+        (staleness carry / error-feedback residual) re-initializes, costing
+        one synchronous / one stiffer-sparsified step on resume."""
         opt_tpl, wrap = self.opt_state, None
-        if self._stale_wrapped():
+        if self._stale_wrapped() or self._ef_wrapped():
             keys = ckpt_lib.read_manifest(
                 self.spec.ckpt_dir, step)["trees"].get("opt_state", ())
             if not any(k.startswith("opt_state:zero1/") for k in keys):
-                opt_tpl, wrap = self.opt_state["zero1"], self._reinit_stale
+                opt_tpl = self.opt_state["zero1"]
+                wrap = (self._reinit_stale if self._stale_wrapped()
+                        else self._reinit_residual)
         try:
             trees, _ = ckpt_lib.restore(self.spec.ckpt_dir, step,
                                         params=self.params,

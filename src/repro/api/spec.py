@@ -58,25 +58,34 @@ from repro.comm.bucketer import CommConfig
 class ModeCaps:
     """What one parallel mode supports, declaratively: does it take the
     explicit-path ``comm`` knobs at all, does it run the §3.1 overlapped
-    train step, and WHICH collective backends its reduce phase accepts
-    (``None`` = comm is rejected outright, so backends are moot).
+    train step, WHICH collective backends its reduce phase accepts
+    (``None`` = comm is rejected outright, so backends are moot), and which
+    gradient wire formats (``CommConfig.wire_format``) it can move.
     ``default_backend`` overrides the ``CommConfig`` default for modes
     whose semantics live in a specific backend (gossip)."""
     comm: bool = False
     overlap: bool = False
     backends: Optional[Tuple[str, ...]] = None
     default_backend: Optional[str] = None
+    wire_formats: Optional[Tuple[str, ...]] = None
 
 
 MODE_CAPS = {
     "serial": ModeCaps(),
     "dp": ModeCaps(),
     "zero1": ModeCaps(comm=True, overlap=True,
-                      backends=("lax", "pallas-ring")),
+                      backends=("lax", "pallas-ring"),
+                      wire_formats=("fp32", "bf16", "int8", "topk")),
     "zero1-gspmd": ModeCaps(),
-    "stale-sync": ModeCaps(comm=True, backends=("lax", "pallas-ring")),
+    # topk's error-feedback residual semantics are defined only for the
+    # synchronous zero1 pipeline: under stale-sync the compensation would
+    # lag the staleness carry, and the gossip pair exchange never moves a
+    # ring message at all (int8 is stateless, so stale-sync takes it)
+    "stale-sync": ModeCaps(comm=True, backends=("lax", "pallas-ring"),
+                           wire_formats=("fp32", "bf16", "int8")),
     "gossip": ModeCaps(comm=True, backends=("gossip",),
-                       default_backend="gossip"),
+                       default_backend="gossip",
+                       wire_formats=("fp32", "bf16")),
 }
 
 PARALLEL_MODES = tuple(MODE_CAPS)
@@ -247,6 +256,20 @@ class RunSpec:
                     f"{caps.backends}. The gossip backend changes the "
                     "consistency model, so it is selected by "
                     "parallel='gossip', not as a zero1 backend swap")
+            fmt = self.comm.wire_format
+            if caps.wire_formats is not None and fmt not in caps.wire_formats:
+                raise ValueError(
+                    f"wire_format {fmt!r} is not valid under "
+                    f"parallel={self.parallel!r}; this mode supports "
+                    f"{caps.wire_formats}. The topk format carries an "
+                    "error-feedback residual whose semantics are defined "
+                    "only for the synchronous zero1 pipeline")
+            if fmt == "topk" and self.comm.overlap:
+                raise ValueError(
+                    "wire_format='topk' cannot run under comm.overlap: the "
+                    "backward-pass reduce taps are stateless, so the "
+                    "error-feedback residual has nowhere to live (int8 and "
+                    "the dense formats overlap fine)")
 
     def replace(self, **kw) -> "RunSpec":
         return replace(self, **kw)

@@ -28,6 +28,7 @@ from typing import List, Optional, Sequence
 
 from repro.cluster.launcher import (
     WorkerHandle,
+    invalidate_autotune_cache,
     kill_workers,
     result_path,
     sigkill,
@@ -93,9 +94,20 @@ def run_elastic(worker_argv: Sequence[str], run_dir: str,
                 max_restarts: int = 2, heartbeat_timeout: float = 120.0,
                 poll_interval: float = 0.25,
                 chaos: Optional[ChaosSpec] = None,
+                grow_back: bool = False,
                 log=print) -> ElasticResult:
     """Supervise ``worker_argv`` at ``num_processes``, shrinking the world
     and relaunching on failure (at most ``max_restarts`` times).
+    ``grow_back`` relaunches every failed attempt at the FULL
+    ``num_processes`` instead of shrinking — the recovery policy for
+    transient failures (preempted-then-returned hosts) rather than lost
+    ones.
+
+    Either way, a relaunch whose world size differs from the attempt that
+    failed invalidates the persisted comm=auto plan
+    (``launcher.autotune_cache_path``): the cached ring constants and the
+    bucket/wire-format choice they justified describe the OLD group size,
+    so the new group must re-probe.
 
     Returns the :class:`ElasticResult` on success; raises ``RuntimeError``
     when the restart budget is exhausted or the final attempt fails.
@@ -145,9 +157,15 @@ def run_elastic(worker_argv: Sequence[str], run_dir: str,
                         f"{tail}")
         history.append({"attempt": attempt, "world": world,
                         "outcome": fail["reason"], "dead": fail["dead"]})
-        # re-form over the survivors; a pure hang (no dead process) keeps
-        # the world size — there is no one to exclude
-        world = max(1, world - len(fail["dead"]))
+        # re-form over the survivors (or back at full strength under
+        # grow_back); a pure hang (no dead process) keeps the world size —
+        # there is no one to exclude
+        new_world = num_processes if grow_back \
+            else max(1, world - len(fail["dead"]))
+        if new_world != world and invalidate_autotune_cache(run_dir):
+            log(f"[elastic] world {world} -> {new_world}: invalidated "
+                f"stale autotune plan cache")
+        world = new_world
     raise RuntimeError(
         f"elastic run failed after {max_restarts + 1} attempts: "
         f"{history}")

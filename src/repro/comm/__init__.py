@@ -40,6 +40,17 @@ knobs, all carried by :class:`~repro.comm.bucketer.CommConfig`:
     ``value_and_grad`` returns.  Only each transfer's "bubble" (the §3.1
     closed form, ``core.balance.bucket_bubble_schedule``) stays exposed.
 
+``wire_format`` (post-paper: compressed bytes-on-wire)
+    How the gradient part-reduce encodes its messages: ``"fp32"`` /
+    ``"bf16"`` (the dense dtypes above), ``"int8"`` (per-message max-abs
+    scales, f32 accumulation per hop so quantization error stays additive
+    across the G-1 hops), or ``"topk"`` ((values, indices) sparse messages
+    with a local error-feedback residual carried in strip state —
+    ``optim.dist.make_topk_ef_update``).  Compression is fused into the
+    ring hop kernels (``kernels/ring.py``) behind the backend seam; the
+    weight part-broadcast is never compressed.  See
+    :data:`~repro.comm.bucketer.WIRE_FORMATS`.
+
 ``backend`` (paper §3.4, the collective implementation)
     Which wire implementation the schedules drive: ``"lax"`` (XLA's
     collectives, the seed behavior) or ``"pallas-ring"`` (the paper's ring
@@ -66,6 +77,7 @@ from repro.comm.backends import (  # noqa: F401
     get_backend,
 )
 from repro.comm.bucketer import (  # noqa: F401
+    WIRE_FORMATS,
     Bucket,
     BucketPlan,
     CommConfig,

@@ -23,6 +23,18 @@ reduce accumulates in bf16 on the wire) and never cast.  The schedule
 layer owns the fp32 accumulate after each stage and the always-fp32
 cross-pod hop and weight broadcast.
 
+**Compressed wire formats.**  ``CommConfig.wire_format in {"int8",
+"topk"}`` is bound into a backend via its optional ``bind_wire_format``
+method (``schedule.bind_wire_format`` probes with ``getattr`` — a backend
+without it, e.g. gossip, only supports the dense formats and ``MODE_CAPS``
+enforces that).  A compressed ``part_reduce`` takes f32 buffers and
+returns f32 strips, owning quantize/dequantize internally: int8 moves
+(int8 message, per-message f32 max-abs scale) pairs with f32 accumulation
+per hop; topk moves (values, int32 indices) with per-hop re-selection.
+``LaxBackend`` runs these as an explicit jnp ppermute ring (the
+``kernels.ref`` oracle math — the fallback reference), ``PallasRingBackend``
+fuses the combine into ``kernels/ring.py`` hop kernels.
+
 **Shapes.**  The schedules only ever pass 1-D fusion buffers whose size is
 a multiple of the group (``bucketer`` pads every bucket); a backend may
 reject anything else with ``NotImplementedError`` (``PallasRingBackend``

@@ -29,9 +29,16 @@ class CollectiveBackend(Protocol):
                      ROADMAP modes need a backend all-reduce).
 
     All three operate on the dtype they are handed and return it unchanged
-    (wire-dtype casts live in ``repro.comm.schedule``).  A backend may
-    restrict ``dim``/rank to the schedules' canonical 1-D fusion-buffer
-    form — raise ``NotImplementedError`` for shapes outside its contract.
+    (wire-dtype casts live in ``repro.comm.schedule``) — EXCEPT when a
+    compressed wire format is bound: a backend may implement
+    ``bind_wire_format(wire_format, topk_ratio) -> backend`` (optional —
+    the schedule layer probes it with ``getattr``), and with ``"int8"`` /
+    ``"topk"`` bound its ``part_reduce`` owns the encode/decode, takes f32
+    and returns f32 strips (the lossy arithmetic IS the wire contract
+    then; ``part_broadcast`` stays dense and dtype-transparent — weights
+    are never compressed).  A backend may restrict ``dim``/rank to the
+    schedules' canonical 1-D fusion-buffer form — raise
+    ``NotImplementedError`` for shapes outside its contract.
     """
     name: str
 

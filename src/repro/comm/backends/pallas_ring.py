@@ -31,9 +31,21 @@ TPU) has not been exercised — this container is CPU-only — and chunk
 sizes here are arbitrary (padded_size/G), not lane-aligned; first TPU
 bring-up should expect to pad hop blocks to (8, 128) tiles (tracked in
 ROADMAP next to the remote-DMA ring).
+
+**Compressed wire formats** (``wire_format``, bound by the schedule layer
+via ``bind_wire_format``): ``"int8"`` replaces the hop combine with
+``kernels.ring.ring_hop_int8`` — the ppermute moves (int8 message, f32
+scale) instead of a dense f32 chunk, each hop dequantizes + accumulates in
+f32 + re-quantizes fresh inside the kernel; ``"topk"`` moves (values,
+indices) messages, the hop scatter-adds them dense
+(``kernels.ring.ring_hop_topk``) and re-selects top-k before forwarding
+(the final hop keeps the dense accumulator).  The part-broadcast of
+updated weights is NEVER compressed — lossy weights would break the
+replicated-params invariant the §3.4 update relies on.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -42,11 +54,25 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.collectives import AxisNames, axis_size, flat_group_index, flatten_pad, unflatten
-from repro.kernels.ring import ring_hop_accum
+from repro.kernels.ring import int8_quantize, ring_hop_accum, ring_hop_int8, ring_hop_topk
 
 
 def _ring_perm(G: int) -> List[Tuple[int, int]]:
     return [(i, (i + 1) % G) for i in range(G)]
+
+
+def topk_chunk_k(n: int, ratio: float, floor: int = 1) -> int:
+    """Entries kept per ``n``-element wire message at ``ratio`` (>= floor,
+    <= n; the n cap wins — ``lax.top_k`` rejects k > n) — shared by both
+    ring backends so their wire layouts agree."""
+    return min(n, max(floor, math.ceil(ratio * n)))
+
+
+def _topk_select(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """(values, int32 indices) of the k largest-|x| entries (jnp: selection
+    is not a memory-bound combine, so it stays outside the Pallas hop)."""
+    _, idx = lax.top_k(jnp.abs(x), k)
+    return x[idx], idx.astype(jnp.int32)
 
 
 @dataclass(frozen=True)
@@ -54,6 +80,14 @@ class PallasRingBackend:
     """``interpret=None`` auto-selects Pallas interpret mode off-TPU."""
     name: str = "pallas-ring"
     interpret: Optional[bool] = None
+    wire_format: str = "fp32"
+    topk_ratio: float = 0.05
+
+    def bind_wire_format(self, wire_format: str,
+                         topk_ratio: float) -> "PallasRingBackend":
+        import dataclasses
+        return dataclasses.replace(self, wire_format=wire_format,
+                                   topk_ratio=topk_ratio)
 
     def _check(self, x: jax.Array, dim: int) -> None:
         if dim != 0 or x.ndim != 1:
@@ -75,12 +109,50 @@ class PallasRingBackend:
         p = flat_group_index(axis_name)
         chunks = x.reshape(G, x.size // G)
         perm = _ring_perm(G)
+        if self.wire_format == "int8":
+            return self._part_reduce_int8(chunks, axis_name, p, perm)
+        if self.wire_format == "topk":
+            return self._part_reduce_topk(chunks, axis_name, p, perm)
         send = chunks[jnp.mod(p - 1, G)]
         for s in range(G - 1):
             recv = lax.ppermute(send, axis_name, perm=perm)
             c = jnp.mod(p - 2 - s, G)
             send = ring_hop_accum(chunks, recv, c, interpret=self.interpret)
         return send
+
+    def _part_reduce_int8(self, chunks, axis_name, p, perm) -> jax.Array:
+        """The same ring with (int8, scale) wire messages; every combine is
+        the fused dequantize-accumulate-requantize hop kernel."""
+        G = chunks.shape[0]
+        chunks = chunks.astype(jnp.float32)
+        q, s = int8_quantize(chunks[jnp.mod(p - 1, G)],
+                             interpret=self.interpret)
+        for step in range(G - 1):
+            qr = lax.ppermute(q, axis_name, perm=perm)
+            sr = lax.ppermute(s, axis_name, perm=perm)
+            c = jnp.mod(p - 2 - step, G)
+            q, s = ring_hop_int8(chunks, qr, sr, c, interpret=self.interpret)
+        # the owned strip leaves the wire once, at the very end
+        return q.astype(jnp.float32) * s[0]
+
+    def _part_reduce_topk(self, chunks, axis_name, p, perm) -> jax.Array:
+        """The same ring with (values, indices) sparse messages; the hop
+        kernel scatter-adds them dense, re-selection precedes each forward
+        (never the final hop — the owned strip keeps the dense sum)."""
+        G, n = chunks.shape
+        chunks = chunks.astype(jnp.float32)
+        k = topk_chunk_k(n, self.topk_ratio)
+        vals, idx = _topk_select(chunks[jnp.mod(p - 1, G)], k)
+        dense = chunks[jnp.mod(p - 1, G)]
+        for step in range(G - 1):
+            vr = lax.ppermute(vals, axis_name, perm=perm)
+            ir = lax.ppermute(idx, axis_name, perm=perm)
+            c = jnp.mod(p - 2 - step, G)
+            dense = ring_hop_topk(chunks, vr, ir, c,
+                                  interpret=self.interpret)
+            if step < G - 2:
+                vals, idx = _topk_select(dense, k)
+        return dense
 
     def part_broadcast(self, x: jax.Array, axis_name: AxisNames,
                        dim: int = 0) -> jax.Array:

@@ -21,6 +21,18 @@ import jax.numpy as jnp
 
 from repro.core.collectives import padded_size
 
+#: supported gradient wire formats (``CommConfig.wire_format``): how the
+#: part-reduce encodes bytes on the wire.  ``fp32``/``bf16`` are the dense
+#: dtypes the schedule always supported; ``int8`` quantizes each message
+#: against a per-message max-abs scale (fp32 accumulate per hop, so error
+#: does not compound across the G-1 hops); ``topk`` sends (values, indices)
+#: of the largest-|g| entries with a local error-feedback residual carried
+#: in strip state (``optim.dist.make_topk_ef_update``).
+WIRE_FORMATS = ("fp32", "bf16", "int8", "topk")
+
+#: wire_format implied by each reduce_dtype when ``wire_format`` is unset
+_DTYPE_FORMATS = {"float32": "fp32", "bfloat16": "bf16"}
+
 
 @dataclass(frozen=True)
 class CommConfig:
@@ -52,6 +64,15 @@ class CommConfig:
                    and lax lowers to the runtime's cross-host collectives
                    (gloo on CPU), which is the backend slot the multi-host
                    subsystem fills.
+    wire_format:   bytes-on-wire encoding of the gradient part-reduce, one
+                   of :data:`WIRE_FORMATS`.  ``None`` (the default) derives
+                   it from ``reduce_dtype`` (``float32 -> "fp32"``,
+                   ``bfloat16 -> "bf16"``) so existing configs keep their
+                   meaning.  ``"int8"``/``"topk"`` compress the reduce side
+                   only — the part-broadcast of updated weights is always
+                   full precision.
+    topk_ratio:    fraction of bucket elements kept per message when
+                   ``wire_format == "topk"`` (0 < ratio <= 1).
     """
     bucket_bytes: int = 4 * 2**20
     reduce_dtype: str = "float32"
@@ -59,13 +80,30 @@ class CommConfig:
     overlap: bool = False
     backend: str = "lax"
     cross_backend: str = "lax"
+    wire_format: Optional[str] = None
+    topk_ratio: float = 0.05
 
     def __post_init__(self):
         # real exceptions, not asserts: config validation must survive -O
-        if self.reduce_dtype not in ("float32", "bfloat16"):
+        if self.reduce_dtype not in _DTYPE_FORMATS:
             raise ValueError(
-                f"reduce_dtype must be 'float32' or 'bfloat16', "
-                f"got {self.reduce_dtype!r}")
+                f"reduce_dtype must be one of "
+                f"{tuple(sorted(_DTYPE_FORMATS))}, got {self.reduce_dtype!r}")
+        if self.wire_format is None:
+            object.__setattr__(
+                self, "wire_format", _DTYPE_FORMATS[self.reduce_dtype])
+        if self.wire_format not in WIRE_FORMATS:
+            raise ValueError(
+                f"wire_format must be one of {WIRE_FORMATS}, "
+                f"got {self.wire_format!r}")
+        if (self.reduce_dtype == "bfloat16"
+                and self.wire_format != "bf16"):
+            raise ValueError(
+                f"reduce_dtype='bfloat16' implies wire_format='bf16'; "
+                f"got conflicting wire_format={self.wire_format!r}")
+        if not (0.0 < self.topk_ratio <= 1.0):
+            raise ValueError(
+                f"topk_ratio must be in (0, 1], got {self.topk_ratio!r}")
         from repro.comm.backends import COLLECTIVE_BACKENDS
         for fld in ("backend", "cross_backend"):
             if getattr(self, fld) not in COLLECTIVE_BACKENDS:
@@ -75,7 +113,15 @@ class CommConfig:
 
     @property
     def wire_dtype(self):
-        return jnp.bfloat16 if self.reduce_dtype == "bfloat16" else jnp.float32
+        """Dense dtype buffers are cast to before ``part_reduce`` — the
+        compressed formats quantize from fp32 inside the backend, so only
+        ``bf16`` changes the handed-off dtype."""
+        return jnp.bfloat16 if self.wire_format == "bf16" else jnp.float32
+
+    @property
+    def compressed(self) -> bool:
+        """Whether the reduce wire uses a non-dense encoding."""
+        return self.wire_format in ("int8", "topk")
 
 
 @dataclass(frozen=True)

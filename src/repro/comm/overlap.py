@@ -124,8 +124,12 @@ def make_overlap_grad(loss_fn: Callable, axes: AxisNames, comm: CommConfig,
     same owner layout) ``make_overlapped_update`` consumes.  The reduces
     issued by the hooks go through ``comm.backend``'s collectives.
     """
+    # wire_format rides the schedule seam here too (int8 overlap works —
+    # stateless); topk never reaches this path: its error-feedback residual
+    # has nowhere to live in a stateless tap, so MODE_CAPS rejects the combo
     sched = make_schedule(axes, comm.hierarchical, comm.backend,
-                          comm.cross_backend)
+                          comm.cross_backend, wire_format=comm.wire_format,
+                          topk_ratio=comm.topk_ratio)
 
     def overlap_grad(params, batch):
         plan = plan_buckets(params, G, comm.bucket_bytes)

@@ -122,6 +122,20 @@ def bind_step(backend: CollectiveBackend, step) -> CollectiveBackend:
     return backend if binder is None else binder(step)
 
 
+def bind_wire_format(backend: CollectiveBackend, wire_format: Optional[str],
+                     topk_ratio: float = 0.05) -> CollectiveBackend:
+    """Bind a compressed wire format (``CommConfig.wire_format``) into a
+    backend that supports one.  Same getattr convention as
+    :func:`bind_step`: backends without ``bind_wire_format`` (gossip) pass
+    through — ``MODE_CAPS`` already restricts which formats reach them.
+    ``None`` and the dense formats bind too (a no-op for fp32/bf16 — the
+    dense dtype ride stays with the schedule's wire-dtype cast)."""
+    if wire_format is None:
+        return backend
+    binder = getattr(backend, "bind_wire_format", None)
+    return backend if binder is None else binder(wire_format, topk_ratio)
+
+
 def reduce_mean(sched: Schedule, buf: jax.Array, wire_dtype,
                 G: int) -> jax.Array:
     """THE reduce phase for one fusion buffer: wire-dtype part-reduce
@@ -136,7 +150,8 @@ def make_schedule(axes: Union[str, Tuple[str, ...]],
                   hierarchical: bool = False,
                   backend: Union[str, CollectiveBackend] = "lax",
                   cross_backend: Union[str, CollectiveBackend, None] = None,
-                  step=None) -> Schedule:
+                  step=None, wire_format: Optional[str] = None,
+                  topk_ratio: float = 0.05) -> Schedule:
     """Pick the schedule for ``axes`` and bind its backend(s).
 
     The hierarchical form needs exactly two axes ``(outer, inner)``; one
@@ -153,10 +168,18 @@ def make_schedule(axes: Union[str, Tuple[str, ...]],
     ``step`` (may be traced) is bound into step-scheduled backends via
     :func:`bind_step` — the gossip partner rotation advances with it;
     step-free backends ignore it.
+
+    ``wire_format`` binds a compressed encoding (:func:`bind_wire_format`)
+    into BOTH levels: in-pod hops move compressed messages, and because the
+    hierarchical reduce casts the in-pod strips back to f32 before the
+    cross-pod hop, the bound outer backend's ``part_reduce`` re-encodes
+    exactly once there — the cross-pod hop is the natural re-quantization
+    point (compressed in-pod, one fresh quantization across pods).
     """
     def resolve(b):
         b = get_backend(b)
-        return b if step is None else bind_step(b, step)
+        b = b if step is None else bind_step(b, step)
+        return bind_wire_format(b, wire_format, topk_ratio)
 
     if hierarchical and not isinstance(axes, str) and len(axes) > 2:
         raise ValueError(

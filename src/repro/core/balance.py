@@ -404,15 +404,95 @@ def bucketed_allreduce_time(total_bytes: float, n_tensors: int,
             + frac * (total_bytes + fill_bytes) / hw.link_bw)
 
 
+# ---------------------------------------------------------------------------
+# Compressed wire formats (CommConfig.wire_format): bytes-on-wire models.
+# The reduce side of the §3.4 strip roundtrip can ship a compressed encoding
+# (the ring dequantizes/accumulates/re-encodes per hop — kernels/ring.py);
+# the all-gather side broadcasts WEIGHTS and always stays dense fp32.  These
+# constants are what the comm sweep and the comm="auto" autotuner use to
+# pick wire format + bucket size jointly.
+# ---------------------------------------------------------------------------
+WIRE_FORMAT_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 1.0}
+INT8_SCALE_BYTES = 4     # one f32 max-abs scale rides along per int8 message
+TOPK_ENTRY_BYTES = 8.0   # 4B f32 value + 4B int32 index per kept element
+
+
+def wire_bytes_per_element(wire_format: str, topk_ratio: float = 0.05) -> float:
+    """Reduce-side wire bytes per (dense fp32) gradient element."""
+    if wire_format == "topk":
+        return TOPK_ENTRY_BYTES * topk_ratio
+    try:
+        return WIRE_FORMAT_BYTES[wire_format]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire format {wire_format!r}; known: "
+            f"{tuple(WIRE_FORMAT_BYTES) + ('topk',)}") from None
+
+
+def wire_reduce_factor(wire_format: str, topk_ratio: float = 0.05) -> float:
+    """Reduce-side bytes-on-wire as a fraction of dense fp32 (fp32 -> 1,
+    bf16 -> 0.5, int8 -> 0.25, topk -> 2*ratio)."""
+    return wire_bytes_per_element(wire_format, topk_ratio) / SIZE_F32
+
+
+def wire_reduce_bytes(total_bytes: float, G: int, n_coll: int,
+                      wire_format: str, topk_ratio: float = 0.05) -> float:
+    """Total reduce-side wire bytes of one step: the compressed payload plus
+    the int8 per-message scale overhead ((G-1) messages per collective).
+    ``total_bytes`` is the DENSE fp32 gradient volume."""
+    data = total_bytes * wire_reduce_factor(wire_format, topk_ratio)
+    if wire_format == "int8":
+        data += n_coll * max(G - 1, 0) * INT8_SCALE_BYTES
+    return data
+
+
+def compressed_allreduce_time(total_bytes: float, n_tensors: int,
+                              bucket_bytes: float, G: int,
+                              hw: HardwareConfig,
+                              wire_format: str = "fp32",
+                              topk_ratio: float = 0.05,
+                              n_coll: int = 0,
+                              fill_bytes: float = 0.0,
+                              backend: str = "lax") -> float:
+    """``bucketed_allreduce_time`` with a compressed reduce wire: the
+    reduce-scatter side moves ``wire_reduce_factor`` of the dense bytes,
+    the all-gather (weight broadcast) side stays dense fp32:
+
+        n_coll * 2*(G-1)*SWlat
+      + (G-1)/G * (1 + f) * (total_bytes + fill_bytes) / BW
+
+    At ``f = 1`` (fp32) this IS ``bucketed_allreduce_time`` — the reduction
+    is property-tested in tests/test_comm.py."""
+    if G <= 1:
+        return 0.0
+    hw = backend_hw(hw, backend)
+    if n_coll <= 0:
+        n_coll = collective_count(total_bytes, n_tensors, bucket_bytes)
+    if fill_bytes <= 0:
+        fill_bytes = total_bytes / n_coll
+    f = wire_reduce_factor(wire_format, topk_ratio)
+    return (n_coll * 2.0 * (G - 1) * hw.sw_latency
+            + (G - 1) / G * (1.0 + f)
+            * (total_bytes + fill_bytes) / hw.link_bw)
+
+
 def optimal_bucket_bytes(total_bytes: float, G: int,
-                         hw: HardwareConfig) -> float:
-    """Minimizer of ``bucketed_allreduce_time`` over the bucket size:
-    d/db [ (B/b)*2*(G-1)*SWlat + 2*(G-1)/G * (B+b)/BW ] = 0
-        =>  b* = sqrt(B * SWlat * BW * G).
-    Clamped to [64 KiB, B] (a bucket never exceeds the whole tree)."""
+                         hw: HardwareConfig,
+                         wire_format: str = "fp32",
+                         topk_ratio: float = 0.05) -> float:
+    """Minimizer of ``compressed_allreduce_time`` over the bucket size:
+    d/db [ (B/b)*2*(G-1)*SWlat + (G-1)/G * (1+f) * (B+b)/BW ] = 0
+        =>  b* = sqrt(B * SWlat * BW * G * 2/(1+f))
+    where ``f`` is the reduce-side ``wire_reduce_factor`` — at fp32
+    (f = 1) this is the classic ``b* = sqrt(B * SWlat * BW * G)``.  A
+    compressed wire shrinks the bandwidth term, so the latency term is
+    amortized over a LARGER optimal bucket.  Clamped to [64 KiB, B] (a
+    bucket never exceeds the whole tree)."""
     if G <= 1 or total_bytes <= 0:
         return total_bytes
-    b = math.sqrt(total_bytes * hw.sw_latency * hw.link_bw * G)
+    f = wire_reduce_factor(wire_format, topk_ratio)
+    b = math.sqrt(total_bytes * hw.sw_latency * hw.link_bw * G
+                  * 2.0 / (1.0 + f))
     return max(min(b, total_bytes), min(64 * 1024, total_bytes))
 
 

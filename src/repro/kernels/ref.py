@@ -88,6 +88,67 @@ def ring_all_gather_ref(strips: jax.Array) -> jax.Array:
     return jnp.broadcast_to(strips.reshape(1, G * n), (G, G * n))
 
 
+def int8_quantize_ref(x: jax.Array):
+    """Oracle for ``kernels.ring.int8_quantize``: symmetric per-message
+    max-abs quantization.  Returns ``(q int8 (n,), scale f32 (1,))`` with
+    ``scale = max|x| / 127`` (1.0 for an all-zero message so dequantize is
+    well defined); round-to-nearest keeps ``|q| <= 127`` by construction."""
+    xf = x.astype(jnp.float32)
+    s = jnp.max(jnp.abs(xf)) / 127.0
+    s = jnp.where(s > 0, s, 1.0)
+    q = jnp.round(xf / s).astype(jnp.int8)
+    return q, s.reshape(1)
+
+
+def int8_dequantize_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`int8_quantize_ref` (f32 result)."""
+    return q.astype(jnp.float32) * scale.reshape(())[None]
+
+
+def ring_hop_int8_ref(chunks: jax.Array, q: jax.Array, scale: jax.Array,
+                      c) -> tuple:
+    """Oracle for ``kernels.ring.ring_hop_int8``: dequantize the received
+    message, accumulate the local partial of chunk ``c`` in f32, and
+    re-quantize against a FRESH max-abs scale — per-hop f32 accumulation is
+    what keeps the quantization error additive (one rounding per hop)
+    instead of compounding across the G-1 hops."""
+    acc = int8_dequantize_ref(q, scale) + chunks[c].astype(jnp.float32)
+    return int8_quantize_ref(acc)
+
+
+def topk_select_ref(x: jax.Array, k: int) -> tuple:
+    """Top-k sparsification oracle: the ``k`` largest-|x| entries as a
+    ``(values f32 (k,), indices int32 (k,))`` wire message."""
+    xf = x.astype(jnp.float32)
+    _, idx = lax.top_k(jnp.abs(xf), k)
+    return xf[idx], idx.astype(jnp.int32)
+
+
+def topk_scatter_ref(vals: jax.Array, idx: jax.Array, n: int) -> jax.Array:
+    """Densify a (values, indices) message into an ``(n,)`` f32 buffer
+    (duplicate indices accumulate, matching the kernel's scatter-add)."""
+    return jnp.zeros((n,), jnp.float32).at[idx].add(
+        vals.astype(jnp.float32))
+
+
+def ring_hop_topk_ref(chunks: jax.Array, vals: jax.Array, idx: jax.Array,
+                      c) -> jax.Array:
+    """Oracle for ``kernels.ring.ring_hop_topk``: scatter the received
+    sparse message dense and add the local partial of chunk ``c`` (f32).
+    Re-selection of the next hop's top-k stays OUTSIDE the kernel (the
+    backend calls :func:`topk_select_ref`-equivalent jnp on the result)."""
+    return topk_scatter_ref(vals, idx, chunks.shape[1]) \
+        + chunks[c].astype(jnp.float32)
+
+
+def topk_mask_ref(x: jax.Array, k: int) -> jax.Array:
+    """Keep the ``k`` largest-|x| entries of ``x`` in place, zero the rest
+    — the bucket-level sparsifier of the error-feedback update
+    (``optim.dist.make_topk_ef_update``); the residual is ``x - mask``."""
+    _, idx = lax.top_k(jnp.abs(x.astype(jnp.float32)), k)
+    return jnp.zeros_like(x).at[idx].set(x[idx])
+
+
 def paged_decode_attention_ref(q: jax.Array, pages_k: jax.Array,
                                pages_v: jax.Array, page_table: jax.Array,
                                lengths: jax.Array, *, window: int = 0,

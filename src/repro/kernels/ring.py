@@ -39,6 +39,20 @@ Accumulation happens in the input dtype: the ring's hop-adds ARE the wire
 arithmetic, so a bf16 wire dtype accumulates in bf16 per hop (the schedule
 layer casts back to fp32 after the reduce, and the cross-pod hop of the
 hierarchical schedule always runs fp32 — see ``repro.comm.schedule``).
+
+``int8_quantize`` / ``ring_hop_int8`` / ``ring_hop_topk``
+    The compressed wire formats (``CommConfig.wire_format``), fused into
+    the per-hop combine: ``ring_hop_int8`` dequantizes the received int8
+    message against its per-message scale, adds the local chunk partial in
+    **f32**, and re-quantizes against a fresh max-abs scale — one rounding
+    per hop, so quantization error stays additive across the G-1 hops
+    instead of compounding.  ``ring_hop_topk`` scatter-adds a received
+    (values, indices) sparse message dense and adds the local partial; the
+    top-k RE-selection for the next hop is plain ``lax.top_k`` in the
+    backend (selection is not a memory-bound combine, fusing it buys
+    nothing).  Like the stacked ring, these run under interpret mode on
+    this container; Mosaic bring-up shares the (8, 128)-tile padding TODO
+    of the hop kernel (ROADMAP, PR 4 remainder).
 """
 from __future__ import annotations
 
@@ -184,3 +198,103 @@ def ring_hop_accum(chunks: jax.Array, recv: jax.Array, c: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct(recv.shape, recv.dtype),
         interpret=_auto_interpret(interpret),
     )(jnp.asarray(c, jnp.int32).reshape(1), chunks, recv)
+
+
+# ---------------------------------------------------------------------------
+# compressed wire formats fused into the hop (CommConfig.wire_format)
+# ---------------------------------------------------------------------------
+def _int8_quantize_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    s = jnp.max(jnp.abs(x)) / 127.0
+    s = jnp.where(s > 0, s, 1.0)   # all-zero message: keep dequant defined
+    q_ref[...] = jnp.round(x / s).astype(jnp.int8)
+    s_ref[0] = s
+
+
+def int8_quantize(x: jax.Array, *,
+                  interpret: Optional[bool] = None) -> tuple:
+    """Quantize a 1-D f32 message to ``(q int8 (n,), scale f32 (1,))``
+    with a symmetric per-message max-abs scale (``kernels.ref.
+    int8_quantize_ref`` is the oracle).  Used for the FIRST send of the
+    int8 ring — every later hop re-quantizes inside ``ring_hop_int8``."""
+    n, = x.shape
+    return pl.pallas_call(
+        _int8_quantize_kernel,
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)),
+        interpret=_auto_interpret(interpret),
+    )(x)
+
+
+def _hop_int8_kernel(c_ref, chunk_ref, q_ref, s_ref, qout_ref, sout_ref):
+    del c_ref  # consumed by the chunk BlockSpec index map
+    acc = q_ref[...].astype(jnp.float32) * s_ref[0] \
+        + chunk_ref[0].astype(jnp.float32)
+    s = jnp.max(jnp.abs(acc)) / 127.0
+    s = jnp.where(s > 0, s, 1.0)
+    qout_ref[...] = jnp.round(acc / s).astype(jnp.int8)
+    sout_ref[0] = s
+
+
+def ring_hop_int8(chunks: jax.Array, q: jax.Array, scale: jax.Array,
+                  c: jax.Array, *,
+                  interpret: Optional[bool] = None) -> tuple:
+    """One int8 ring hop, fully fused: dequantize the received message
+    ``(q, scale)``, add this member's local partial of chunk ``c`` in f32,
+    re-quantize against a fresh max-abs scale.  Returns the next wire
+    message ``(q' int8 (n,), scale' f32 (1,))``.  Same scalar-prefetch
+    chunk selection as :func:`ring_hop_accum`."""
+    from jax.experimental.pallas import tpu as pltpu
+    G, n = chunks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i, c_ref: (c_ref[0], 0)),
+                  pl.BlockSpec((n,), lambda i, c_ref: (0,)),
+                  pl.BlockSpec((1,), lambda i, c_ref: (0,))],
+        out_specs=[pl.BlockSpec((n,), lambda i, c_ref: (0,)),
+                   pl.BlockSpec((1,), lambda i, c_ref: (0,))],
+    )
+    return pl.pallas_call(
+        _hop_int8_kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)),
+        interpret=_auto_interpret(interpret),
+    )(jnp.asarray(c, jnp.int32).reshape(1), chunks, q, scale)
+
+
+def _hop_topk_kernel(c_ref, chunk_ref, val_ref, idx_ref, out_ref):
+    del c_ref
+    n = out_ref.shape[0]
+    dense = jnp.zeros((n,), jnp.float32).at[idx_ref[...]].add(
+        val_ref[...].astype(jnp.float32))
+    out_ref[...] = dense + chunk_ref[0].astype(jnp.float32)
+
+
+def ring_hop_topk(chunks: jax.Array, vals: jax.Array, idx: jax.Array,
+                  c: jax.Array, *,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """One top-k ring hop combine: scatter-add the received sparse message
+    ``(vals, idx)`` into a dense f32 buffer and add this member's local
+    partial of chunk ``c``.  Returns the dense ``(n,)`` accumulator — the
+    backend re-selects its top-k before forwarding (and keeps the dense
+    result on the final hop, so the LAST combine loses nothing)."""
+    from jax.experimental.pallas import tpu as pltpu
+    G, n = chunks.shape
+    k, = vals.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i, c_ref: (c_ref[0], 0)),
+                  pl.BlockSpec((k,), lambda i, c_ref: (0,)),
+                  pl.BlockSpec((k,), lambda i, c_ref: (0,))],
+        out_specs=pl.BlockSpec((n,), lambda i, c_ref: (0,)),
+    )
+    return pl.pallas_call(
+        _hop_topk_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=_auto_interpret(interpret),
+    )(jnp.asarray(c, jnp.int32).reshape(1), chunks, vals,
+      jnp.asarray(idx, jnp.int32))

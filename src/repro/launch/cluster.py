@@ -128,6 +128,11 @@ def main(argv=None) -> int:
                     help="chaos harness: SIGKILL one worker when its "
                          "heartbeat reaches this step (first attempt only)")
     ap.add_argument("--chaos-kill-worker", type=int, default=1)
+    ap.add_argument("--grow-back", action="store_true",
+                    help="relaunch failed attempts at the FULL --processes "
+                         "world instead of shrinking to the survivors "
+                         "(transient-failure recovery policy; any world "
+                         "change invalidates the cached comm=auto plan)")
     ap.add_argument("--verify", action="store_true",
                     help="also train single-process and assert the final "
                          "losses match (G-invariance, end to end)")
@@ -151,7 +156,7 @@ def main(argv=None) -> int:
                       local_devices=args.local_devices,
                       max_restarts=args.max_restarts,
                       heartbeat_timeout=args.heartbeat_timeout,
-                      chaos=chaos)
+                      chaos=chaos, grow_back=args.grow_back)
     final = res.result.get("final_loss") if res.result else None
     print(f"[cluster] done: world={res.final_world} "
           f"attempts={res.attempts} final_loss={final}")

@@ -13,6 +13,11 @@ mesh, placement, update-path selection), and ``Run.fit`` trains.
     python -m repro.launch.train --arch vgg-a --smoke \\
         --parallel zero1 --comm-backend pallas-ring
 
+    # compressed bytes-on-wire: int8-quantized hops fused into the ring
+    # (or --wire-format topk for sparsified + error-feedback)
+    python -m repro.launch.train --arch vgg-a --smoke \\
+        --parallel zero1 --comm-backend pallas-ring --wire-format int8
+
     # the relaxed-consistency modes on the same pipeline: bounded
     # staleness (apply last step's reduce) / GossipGraD partner exchange
     python -m repro.launch.train --arch vgg-a --smoke --parallel stale-sync
@@ -38,7 +43,7 @@ from repro.api import (
     RunSpec,
     compile_run,
 )
-from repro.comm import COLLECTIVE_BACKENDS, CommConfig
+from repro.comm import COLLECTIVE_BACKENDS, WIRE_FORMATS, CommConfig
 from repro.configs import ALL_ARCHS
 
 WIRE_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
@@ -50,7 +55,8 @@ def comm_flags_set(args) -> bool:
     ``MODE_CAPS``)."""
     return (args.bucket_mb is not None or args.wire_dtype != "fp32"
             or args.overlap or args.comm_backend != "lax"
-            or args.cross_backend is not None)
+            or args.cross_backend is not None
+            or args.wire_format is not None)
 
 
 def spec_from_args(args, cluster: bool = False) -> RunSpec:
@@ -76,7 +82,9 @@ def spec_from_args(args, cluster: bool = False) -> RunSpec:
                           hierarchical=hierarchical,
                           overlap=args.overlap,
                           backend=backend,
-                          cross_backend=args.cross_backend or "lax")
+                          cross_backend=args.cross_backend or "lax",
+                          wire_format=args.wire_format,
+                          topk_ratio=args.topk_ratio)
     ckpt_every = 0
     if args.ckpt_dir:
         ckpt_every = args.ckpt_every if args.ckpt_every \
@@ -123,6 +131,16 @@ def add_run_args(ap: argparse.ArgumentParser, parallel_default: str = "dp"):
                          "(default 4)")
     ap.add_argument("--wire-dtype", default="fp32", choices=list(WIRE_DTYPES),
                     help="gradient part-reduce wire dtype (zero1)")
+    ap.add_argument("--wire-format", default=None,
+                    choices=list(WIRE_FORMATS),
+                    help="gradient bytes-on-wire encoding: fp32/bf16 "
+                         "(dense), int8 (per-message scales, f32 "
+                         "accumulate per hop), topk ((values, indices) "
+                         "sparse messages + error-feedback residual; "
+                         "zero1 only).  Default: derived from --wire-dtype")
+    ap.add_argument("--topk-ratio", type=float, default=0.05,
+                    help="fraction of entries kept per message under "
+                         "--wire-format topk")
     ap.add_argument("--overlap", action="store_true",
                     help="issue each bucket's part-reduce inside the "
                          "backward pass (§3.1 bubble schedule) instead of "
@@ -191,6 +209,15 @@ def check_run_args(ap: argparse.ArgumentParser, args) -> None:
         ap.error(f"--comm-backend {args.comm_backend} is not valid under "
                  f"--parallel {args.parallel}; this mode supports "
                  f"{list(caps.backends)}")
+    if (args.wire_format is not None and caps.wire_formats is not None
+            and args.wire_format not in caps.wire_formats):
+        ap.error(f"--wire-format {args.wire_format} is not valid under "
+                 f"--parallel {args.parallel}; this mode supports "
+                 f"{list(caps.wire_formats)}")
+    if args.wire_format == "topk" and args.overlap:
+        ap.error("--wire-format topk cannot run with --overlap: the "
+                 "backward-pass reduce taps are stateless, so the "
+                 "error-feedback residual has nowhere to live")
 
 
 def main(argv=None):

@@ -34,7 +34,11 @@ Every mode is a composition of the phases, not its own builder:
   * ``parallel="gossip"`` — the same pipeline with the reduce phase's
     collectives swapped for the GossipGraD partner exchange
     (``comm.backends.gossip``; the schedule seam carries the step so the
-    partner rotation advances).
+    partner rotation advances);
+  * ``make_topk_ef_update`` — the ``wire_format="topk"`` composition: the
+    reduce phase's input is error-feedback-compensated (residual carried
+    in strip state) and sparsified per bucket before the wire; the ring
+    itself then moves (values, indices) messages.
 
 Communication goes through ``repro.comm``: the gradient tree is coalesced
 into fixed-byte fusion buffers (``CommConfig.bucket_bytes``) so each BUCKET
@@ -122,10 +126,12 @@ class UpdatePlan:
 
     def schedule(self, step=None) -> Schedule:
         """The collective schedule, with ``step`` (may be traced) bound
-        into step-scheduled backends — the gossip partner rotation."""
+        into step-scheduled backends — the gossip partner rotation — and
+        the wire format bound into format-aware ones."""
         return make_schedule(self.axis_arg, self.comm.hierarchical,
                              self.comm.backend, self.comm.cross_backend,
-                             step=step)
+                             step=step, wire_format=self.comm.wire_format,
+                             topk_ratio=self.comm.topk_ratio)
 
     def owner_layout(self) -> Optional[np.ndarray]:
         return owner_perm(self.comm.hierarchical,
@@ -339,6 +345,82 @@ def make_stale_sync_update(optimizer, mesh: Mesh, data_axes=("data",),
                      "synced": jnp.ones((), jnp.int32),
                      "zero1": new_inner}
         return new_params, new_state
+
+    return init_fn, up.wrap_update(_update)
+
+
+def make_topk_ef_update(optimizer, mesh: Mesh, data_axes=("data",),
+                        comm: Optional[CommConfig] = None):
+    """The ``wire_format="topk"`` composition: top-k sparsified reduce with
+    LOCAL error feedback (the memory/compensation scheme of the deep
+    gradient compression line — PAPERS.md 1712.01887 / 1711.00705).  Each
+    step, every member adds its carried residual to the packed bucket
+    gradient, keeps the ``topk_ratio`` largest-|g| entries, and carries
+    ``buffer - kept`` forward — what sparsification drops this step is
+    re-offered next step, which is what keeps top-k from biasing the
+    trajectory the way plain truncation would.  The sparse buckets then
+    ride the normal reduce phase, whose topk-bound backend moves (values,
+    indices) messages with per-hop re-selection on the ring.
+
+    opt_state wraps the zero1 strip state:
+
+        {"residual": per-bucket (G, padded_size) f32 — row p is member p's
+                     local unsent gradient mass (sharded dim 0, so each
+                     member materializes one bucket-sized row),
+         "zero1":    the inner strip state (BIT-identical layout to the
+                     synchronous modes', so zero1 checkpoints resume here
+                     with a zero residual — see ``api.run``)}
+
+    The residual is member-LOCAL by construction, so a cross-world replan
+    cannot convert it (old members' unsent mass has no owner in the new
+    world); restore re-zeros it — one step of stiffer sparsification, the
+    same trade the stale-sync buffer re-init makes.
+
+    update_fn(params, grads, opt_state, lr, step=0)
+        -> (new_params, new_opt_state)
+    """
+    from repro.comm.backends.pallas_ring import topk_chunk_k
+    from repro.kernels.ref import topk_mask_ref
+
+    comm = DEFAULT_COMM if comm is None else comm
+    if comm.wire_format != "topk":
+        raise ValueError(
+            "make_topk_ef_update requires CommConfig(wire_format='topk'); "
+            f"got {comm.wire_format!r}")
+    up = UpdatePlan.build(optimizer, mesh, data_axes, comm)
+
+    def init_fn(params):
+        plan = up.buckets(params)
+        sh = NamedSharding(mesh, P(up.axis_arg))
+        residual = tuple(
+            jax.device_put(jnp.zeros((up.G, b.padded_size), jnp.float32),
+                           sh)
+            for b in plan.buckets)
+        return {"residual": residual, "zero1": up.init_fn(params)}
+
+    def _update(params, grads, opt_state, lr, step):
+        plan = up.buckets(params)
+        sched = up.schedule(step)
+        flat_grads = jax.tree.leaves(grads)
+        g_strips, new_res = [], []
+        for b, res in zip(plan.buckets, opt_state["residual"]):
+            buf = pack_bucket(flat_grads, b).astype(jnp.float32) + res[0]
+            # floor G: every wire chunk must get at least one entry, and
+            # the per-chunk k the backend re-selects with (ratio * n/G,
+            # floored at 1) then carries at least the bucket's k/G — mass
+            # that concentrates in one chunk beyond its per-chunk k is
+            # dropped on the wire, the canonical gTop-k approximation,
+            # and lands back in the residual via error feedback
+            k = topk_chunk_k(b.padded_size, up.comm.topk_ratio, floor=up.G)
+            kept = topk_mask_ref(buf, k)
+            new_res.append((buf - kept)[None])
+            g_strips.append(reduce_mean(sched, kept, up.comm.wire_dtype,
+                                        up.G))
+        new_p_strips, new_inner = up.apply(sched, plan, params, g_strips,
+                                           opt_state["zero1"], lr)
+        new_params = up.broadcast(sched, plan, params, new_p_strips)
+        return new_params, {"residual": tuple(new_res),
+                            "zero1": new_inner}
 
     return init_fn, up.wrap_update(_update)
 

@@ -24,10 +24,27 @@ In multi-process runs every process probes in lockstep (same deterministic
 plan); the per-sample times are allgathered and averaged so every process
 fits identical constants and picks the SAME plan — divergent bucket plans
 across members would deadlock the first real collective.
+
+The probes time the DENSE fp32 roundtrip; compressed wire formats
+(``CommConfig.wire_format``) are then predicted analytically from the
+fitted (SWlat, BW) via ``core.balance``'s bytes-on-wire models, and the
+winner is the jointly-best (backend, wire_format, bucket_bytes) triple.
+``topk`` is never auto-chosen — it is lossy AND stateful (error-feedback
+residual in the optimizer state), so it stays an explicit opt-in.
+
+When ``cache_path`` is set (the cluster launcher exports
+``ENV_AUTOTUNE_CACHE`` pointing into the run dir), the chosen plan is
+persisted keyed by the probe inputs (group size, axes, gradient bytes,
+candidate sets) and an elastic relaunch with the SAME key skips the probe
+entirely; a world-size change misses the key and re-probes — the
+elastic supervisor also deletes the file outright on shrink/grow so stale
+ring constants can never leak across a topology change.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
@@ -41,13 +58,17 @@ from jax.sharding import PartitionSpec as P
 from repro.comm.bucketer import CommConfig, plan_buckets
 from repro.comm.schedule import group_axes, make_schedule
 from repro.configs.base import HardwareConfig
-from repro.core.balance import optimal_bucket_bytes
+from repro.core.balance import optimal_bucket_bytes, wire_reduce_factor
 
 # clamps for degenerate fits (a 1-member group, or noise driving the least
 # squares negative): keep the constants positive and finite so the closed
 # form — and the JSON the plan event serializes to — stay well-defined
 MIN_LATENCY_S = 1e-9
 MAX_BANDWIDTH = 1e15
+
+# env var the cluster launcher sets on every worker: path of the per-run
+# autotune plan cache (see module docstring)
+ENV_AUTOTUNE_CACHE = "REPRO_AUTOTUNE_CACHE"
 
 
 @dataclass(frozen=True)
@@ -86,12 +107,43 @@ def fit_comm_model(probes: Sequence[CommProbe],
 
 
 def choose_bucket_bytes(total_bytes: int, G: int, sw_latency: float,
-                        link_bw: float) -> int:
+                        link_bw: float, wire_format: str = "fp32",
+                        topk_ratio: float = 0.05) -> int:
     """``optimal_bucket_bytes`` with measured constants in place of the
-    ``backend_hw`` table (G<=1 degenerates to one whole-tree bucket)."""
+    ``backend_hw`` table (G<=1 degenerates to one whole-tree bucket).
+    ``wire_format`` applies the bytes-on-wire factor — a compressed reduce
+    wire amortizes the latency term over a larger optimal bucket."""
     b = optimal_bucket_bytes(float(total_bytes), G,
-                             measured_hw(sw_latency, link_bw))
+                             measured_hw(sw_latency, link_bw),
+                             wire_format=wire_format, topk_ratio=topk_ratio)
     return max(1, int(b))
+
+
+def _cache_key(G, axes, total_bytes, backends, wire_formats) -> dict:
+    return {"G": int(G), "axes": list(axes),
+            "total_bytes": int(total_bytes),
+            "backends": list(backends), "wire_formats": list(wire_formats)}
+
+
+def _load_cached_plan(path: str, key: dict):
+    """The persisted plan, or None on any miss (absent/corrupt/other key)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return data.get("plan") if data.get("key") == key else None
+
+
+def _save_cached_plan(path: str, key: dict, plan: dict) -> None:
+    """Atomic write (tmp + rename) — co-located workers may race."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump({"key": key, "plan": plan}, f, indent=1)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # an unwritable cache just means re-probing next launch
 
 
 def _probe_sizes(params, G: int, total_bytes: int,
@@ -173,13 +225,20 @@ def _sync_times(probes: List[CommProbe]) -> List[CommProbe]:
 
 def autotune_comm(params, mesh, data_axes, base: CommConfig,
                   recorder=None, backends: Optional[Sequence[str]] = None,
-                  reps: int = 2, log=print) -> CommConfig:
+                  reps: int = 2, log=print,
+                  wire_formats: Optional[Sequence[str]] = None,
+                  cache_path: Optional[str] = None) -> CommConfig:
     """Measure, fit, choose: returns ``base`` with ``bucket_bytes`` (and
-    possibly ``backend``) replaced by the measured-optimal plan.
+    possibly ``backend`` / ``wire_format``) replaced by the jointly
+    optimal measured plan.
 
     ``backends`` is the candidate set (the mode's ``MODE_CAPS.backends``);
     ``base.backend`` is always probed first and is the fallback when an
-    alternative fails to build or run on this mesh."""
+    alternative fails to build or run on this mesh.  ``wire_formats`` is
+    the mode's wire-format capability set; ``topk`` is filtered out (lossy
+    AND stateful — explicit opt-in only, see module docstring).
+    ``cache_path`` short-circuits the probe when a persisted plan's key
+    matches this launch."""
     from repro.telemetry.events import NULL_RECORDER
     recorder = recorder if recorder is not None else NULL_RECORDER
     axes, axis_arg, G = group_axes(mesh, data_axes)
@@ -192,6 +251,25 @@ def autotune_comm(params, mesh, data_axes, base: CommConfig,
     for b in backends or ():
         if b not in candidates:
             candidates.append(b)
+    formats = [base.wire_format]
+    for fmt in wire_formats or ():
+        if fmt != "topk" and fmt not in formats:
+            formats.append(fmt)
+
+    key = _cache_key(G, axes, total_bytes, candidates, formats)
+    if cache_path:
+        plan = _load_cached_plan(cache_path, key)
+        if plan is not None:
+            comm = dataclasses.replace(
+                base, bucket_bytes=int(plan["bucket_bytes"]),
+                backend=plan["chosen_backend"],
+                wire_format=plan["chosen_wire_format"])
+            recorder.event("autotune_plan", group=G, cached=True,
+                           total_bytes=int(total_bytes), probes=0, **plan)
+            log(f"comm=auto: cached plan ({cache_path}) -> "
+                f"bucket_bytes={comm.bucket_bytes} backend={comm.backend} "
+                f"wire_format={comm.wire_format}")
+            return comm
 
     fits = {}
     all_probes: List[CommProbe] = []
@@ -207,31 +285,46 @@ def autotune_comm(params, mesh, data_axes, base: CommConfig,
                 f"({type(e).__name__}: {e}); skipping")
             continue
         all_probes.extend(probes)
-        lat, bw = fit_comm_model(probes, G)
-        b_star = choose_bucket_bytes(total_bytes, G, lat, bw)
-        # predicted step wire time at this backend's own optimum: latency
-        # per collective of its plan + bandwidth term (the comparison that
-        # picks the backend)
-        n_coll = plan_buckets(params, G, b_star).n_collectives
-        frac = 2.0 * (G - 1) / max(G, 1)
-        t_pred = (n_coll * 2.0 * (G - 1) * lat
-                  + frac * total_bytes / bw) if G > 1 else 0.0
-        fits[backend] = {"sw_latency_s": lat, "link_bw_Bps": bw,
-                         "bucket_bytes": b_star, "n_collectives": n_coll,
-                         "predicted_s": t_pred}
+        fits[backend] = fit_comm_model(probes, G)
 
-    winner = min(fits, key=lambda b: (fits[b]["predicted_s"],
-                                      b != base.backend))
-    chosen = fits[winner]
+    # joint choice: for each surviving backend's fitted constants, predict
+    # the step wire time of every candidate format at ITS OWN optimal
+    # bucket — compressed formats shrink only the reduce side (the weight
+    # all-gather stays dense fp32, see core.balance.compressed_allreduce_time)
+    plans = {}
+    for backend, (lat, bw) in fits.items():
+        for fmt in formats:
+            b_star = choose_bucket_bytes(total_bytes, G, lat, bw,
+                                         wire_format=fmt,
+                                         topk_ratio=base.topk_ratio)
+            n_coll = plan_buckets(params, G, b_star).n_collectives
+            f = wire_reduce_factor(fmt, base.topk_ratio)
+            t_pred = (n_coll * 2.0 * (G - 1) * lat
+                      + (G - 1) / G * (1.0 + f) * total_bytes / bw) \
+                if G > 1 else 0.0
+            plans[(backend, fmt)] = {
+                "sw_latency_s": lat, "link_bw_Bps": bw,
+                "bucket_bytes": b_star, "n_collectives": n_coll,
+                "predicted_s": t_pred}
+
+    winner = min(plans, key=lambda k: (plans[k]["predicted_s"],
+                                       k[0] != base.backend,
+                                       k[1] != base.wire_format))
+    w_backend, w_fmt = winner
+    chosen = dict(plans[winner], chosen_backend=w_backend,
+                  chosen_wire_format=w_fmt)
     comm = dataclasses.replace(base, bucket_bytes=chosen["bucket_bytes"],
-                               backend=winner)
+                               backend=w_backend, wire_format=w_fmt)
+    if cache_path:
+        _save_cached_plan(cache_path, key, chosen)
     recorder.event("autotune_plan", group=G, total_bytes=int(total_bytes),
                    probes=len(all_probes), backends=list(fits),
-                   chosen_backend=winner, **chosen)
+                   wire_formats=list(formats), **chosen)
     log(f"comm=auto: G={G} measured SWlat={chosen['sw_latency_s']:.2e}s "
         f"BW={chosen['link_bw_Bps'] / 2 ** 30:.2f}GiB/s over "
         f"{len(all_probes)} collective probes -> "
         f"bucket_bytes={chosen['bucket_bytes']} "
         f"({chosen['bucket_bytes'] / 2 ** 20:.2f}MiB, "
-        f"{chosen['n_collectives']} collectives) backend={winner}")
+        f"{chosen['n_collectives']} collectives) backend={w_backend} "
+        f"wire_format={w_fmt}")
     return comm

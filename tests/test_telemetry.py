@@ -247,10 +247,12 @@ def test_autotune_picks_measured_optimal_bucket_on_mesh():
 
 
 def test_comm_auto_run_matches_fixed_comm_loss_and_emits_trace():
-    """The acceptance criterion: a --comm auto run completes with the SAME
-    final loss as the fixed-comm run (the §3.4 update is bucket-size
-    invariant), emits a loadable Chrome trace containing step/data_wait/
-    collective spans, and logs the autotuned plan."""
+    """The acceptance criterion: a --comm auto run completes with the same
+    final loss as the fixed-comm run to tight tolerance (the §3.4 update is
+    bucket-size INVARIANT, but the autotuner also picks the wire format
+    jointly and int8's per-hop quantization is lossy), emits a loadable
+    Chrome trace containing step/data_wait/collective spans, and logs the
+    autotuned plan including the chosen wire format."""
     with tempfile.TemporaryDirectory() as td:
         out = run_py(f"""
             import json
@@ -261,8 +263,13 @@ def test_comm_auto_run_matches_fixed_comm_loss_and_emits_trace():
             h_auto = main(quiet_args + ["--comm", "auto",
                                         "--trace-dir", {td!r}])
             h_fix = main(quiet_args)
-            assert h_auto[-1]["loss"] == h_fix[-1]["loss"], (h_auto, h_fix)
+            diff = abs(h_auto[-1]["loss"] - h_fix[-1]["loss"])
+            assert diff <= 1e-3 * abs(h_fix[-1]["loss"]), (h_auto, h_fix)
             evs = json.load(open({td!r} + "/trace.json"))["traceEvents"]
+            plan = next(e for e in evs
+                        if e.get("name") == "autotune_plan")
+            assert plan["args"]["chosen_wire_format"] in (
+                "fp32", "bf16", "int8"), plan
             names = {{e.get("name") for e in evs}}
             for want in ("step", "data_wait", "collective",
                          "autotune_plan", "autotune"):
